@@ -1,0 +1,38 @@
+"""ChaCha20 kernel microbenchmark (paper §1: 2.89 GB/s AVX-512 vs
+1.6 GB/s AVX2). On CPU we report us_per_call of the Pallas kernel
+(interpret mode) and of the jnp reference; the derived column gives the
+simulated-ISA GB/s ratios from the frequency-aware simulator."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.experiments import fig2_sensitivity
+from repro.kernels.chacha20 import keystream
+from repro.kernels.ref import chacha20_keystream_ref
+
+
+def rows():
+    key = jnp.arange(8, dtype=jnp.uint32)
+    nonce = jnp.asarray([1, 2, 3], dtype=jnp.uint32)
+    n = 1024                               # 64 KiB of keystream
+    out = []
+    for name, fn in (
+        ("pallas_interpret",
+         lambda: keystream(key, nonce, 1, n_blocks=n, tile=256)),
+        ("jnp_ref",
+         lambda: jax.jit(lambda: chacha20_keystream_ref(key, nonce, 1, n))()),
+    ):
+        fn()[0].block_until_ready() if hasattr(fn(), "block_until_ready") \
+            else fn()
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            r = fn()
+            jax.block_until_ready(r)
+        us = (time.time() - t0) * 1e6 / reps
+        gbps = n * 64 / (us / 1e6) / 1e9
+        out.append((f"crypto_micro[{name}]", us, f"{gbps:.3f}GB/s_host"))
+    return out

@@ -1,0 +1,59 @@
+"""One benchmark per paper figure. Each returns rows of
+(name, us_per_call, derived) for run.py's CSV."""
+from __future__ import annotations
+
+import time
+
+from repro.core.experiments import (fig2_sensitivity, fig5_throughput,
+                                    fig7_overhead)
+
+F0 = 2.8
+
+
+def bench_fig5_fig6(sim_us=1_000_000):
+    t0 = time.time()
+    res = fig5_throughput(sim_us=sim_us)
+    wall = (time.time() - t0) * 1e6 / 6
+    rows = []
+    for k, v in res.items():
+        rows.append((f"fig5_throughput[{k}]", wall,
+                     f"norm={v['normalized']:.3f}"))
+        rows.append((f"fig6_frequency[{k}]", wall,
+                     f"freq_drop={100 * (1 - v['avg_freq_ghz'] / F0):.1f}%"))
+    for isa in ("avx512", "avx2"):
+        dns = 1 - res[f"{isa}|nospec"]["normalized"]
+        dsp = 1 - res[f"{isa}|spec"]["normalized"]
+        rows.append((f"fig5_variability_reduction[{isa}]", wall,
+                     f"{100 * (dns - dsp) / dns:.0f}%"))
+    return rows
+
+
+def bench_fig2(sim_us=700_000):
+    t0 = time.time()
+    out = fig2_sensitivity(sim_us=sim_us)
+    wall = (time.time() - t0) * 1e6 / 9
+    rows = []
+    for mode, d in out.items():
+        for isa, v in d.items():
+            rows.append((f"fig2_sensitivity[{mode}|{isa}]", wall,
+                         f"norm={v:.3f}"))
+    return rows
+
+
+def bench_fig7(sim_us=300_000):
+    t0 = time.time()
+    res = fig7_overhead(sim_us=sim_us)
+    wall = (time.time() - t0) * 1e6 / len(res)
+    return [(f"fig7_overhead[{r['type_changes_per_s']:.0f}/s]", wall,
+             f"overhead={100 * r['overhead']:.2f}%") for r in res]
+
+
+def bench_cohort(sim_us=700_000):
+    """Paper §5: cohort scheduling vs core specialization (beyond-paper
+    validation of the stated expectation)."""
+    from repro.core.experiments import cohort_comparison
+    t0 = time.time()
+    r = cohort_comparison(sim_us=sim_us)
+    wall = (time.time() - t0) * 1e6 / 3
+    return [(f"cohort_vs_spec[{k}]", wall, f"{100 * v:.1f}%")
+            for k, v in r.items()]

@@ -1,0 +1,28 @@
+"""Roofline table from the dry-run results (deliverable g): per-cell
+terms, dominant bottleneck, useful-FLOPs ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("results/dryrun.json")
+
+
+def rows(mesh: str = "single"):
+    if not DRYRUN.exists():
+        return [("roofline[missing]", 0.0, "run repro.launch.dryrun first")]
+    res = json.loads(DRYRUN.read_text())
+    out = []
+    for key, v in sorted(res.items()):
+        if v.get("status") != "ok" or not key.endswith(f"|{mesh}"):
+            continue
+        r = v["roofline"]
+        arch, shape, _ = key.split("|")
+        out.append((
+            f"roofline[{arch}|{shape}]",
+            r["step_s"] * 1e6,
+            f"bn={r['bottleneck']} comp={r['compute_s']:.3g}s "
+            f"mem_lb={r['memory_floor_s']:.3g}s coll={r['collective_s']:.3g}s "
+            f"useful={r['useful_flops_ratio']:.2f} mfu={r['mfu']:.3f}",
+        ))
+    return out

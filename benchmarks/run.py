@@ -1,0 +1,49 @@
+"""Benchmark harness — one section per paper table/figure plus the
+TPU-adaptation benches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5,serving
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig2,fig5,fig7,cohort,"
+                         "crypto,serving,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import crypto_micro, figures, roofline_table
+    from benchmarks import serving_specialization
+
+    sections = [
+        ("fig5", lambda: figures.bench_fig5_fig6()),
+        ("fig2", lambda: figures.bench_fig2()),
+        ("fig7", lambda: figures.bench_fig7()),
+        ("cohort", lambda: figures.bench_cohort()),
+        ("crypto", crypto_micro.rows),
+        ("serving", serving_specialization.rows),
+        ("roofline", roofline_table.rows),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

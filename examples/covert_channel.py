@@ -1,0 +1,107 @@
+"""The paper's §1 isolation claim, demonstrated: AVX-induced frequency
+reduction forms a covert channel between otherwise isolated processes —
+and core specialization closes it.
+
+Without specialization, sender and receiver time-share a core. The sender
+holds each bit for one 2.5 ms window: a '1' window repeats dense AVX-512
+bursts (the 2 ms license tail keeps the core at the reduced frequency),
+a '0' window is pure scalar. The receiver times short scalar probes; a
+'1' window makes them ~32% slower. With core specialization the sender
+(an AVX task) is confined to the AVX core and the receiver's scalar core
+never changes frequency — the channel reads noise.
+
+  PYTHONPATH=src python examples/covert_channel.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core.muqss import SchedConfig  # noqa: E402
+from repro.core.simulator import RequestDone, Simulator  # noqa: E402
+from repro.core.task import IClass, Segment, Task, TaskType  # noqa: E402
+
+SLOT_US = 250.0          # scheduler slot
+BIT_SLOTS = 10           # 2.5 ms per bit (> 2 ms hysteresis)
+F0 = 2.8e3               # cycles/us at L0
+
+
+def sender(bits):
+    for b in bits:
+        for _ in range(BIT_SLOTS):
+            if b:
+                yield Segment(0.3 * SLOT_US * 1.9e3, IClass.AVX512,
+                              dense=True, stack=("sender", "avx_burst"))
+                yield Segment(0.7 * SLOT_US * F0, IClass.SCALAR,
+                              stack=("sender", "pad"))
+            else:
+                yield Segment(SLOT_US * F0, IClass.SCALAR,
+                              stack=("sender", "pad"))
+        yield RequestDone()
+
+
+def receiver(n_probes, probe_cycles):
+    for _ in range(n_probes):
+        yield Segment(probe_cycles, IClass.SCALAR,
+                      stack=("receiver", "probe"))
+        yield RequestDone()
+
+
+def run(spec: bool, bits):
+    if spec:
+        scfg = SchedConfig(n_cores=2, n_avx_cores=1, specialization=True,
+                           rr_interval_us=SLOT_US)
+    else:
+        scfg = SchedConfig(n_cores=1, n_avx_cores=0, specialization=False,
+                           rr_interval_us=SLOT_US)
+    sim = Simulator(scfg)
+    probe = 0.9 * SLOT_US * F0
+    total_us = len(bits) * BIT_SLOTS * SLOT_US * (2.2 if not spec else 1.2)
+    s = Task(sender(bits), name="sender",
+             ttype=TaskType.AVX if spec else TaskType.SCALAR)
+    r = Task(receiver(int(total_us / SLOT_US) + 8, probe),
+             ttype=TaskType.SCALAR, name="receiver")
+    sim.add_task(s, 0.0)
+    sim.add_task(r, 1.0)
+    sim.run(total_us)
+    probes = [(t, lat) for t, lat, name in sim.metrics.completions
+              if name == "receiver"]
+    sends = [t for t, _, name in sim.metrics.completions
+             if name == "sender"]
+    return probes, sends
+
+
+def decode(probes, sends, bits):
+    """Average probe latency inside each sender bit window."""
+    if len(sends) < len(bits):
+        bits = bits[:len(sends)]
+    starts = [0.0] + sends[:-1]
+    means = []
+    for s0, s1 in zip(starts, sends):
+        xs = [lat for t, lat in probes if s0 < t <= s1]
+        means.append(np.mean(xs) if xs else 0.0)
+    means = np.asarray(means)
+    thresh = np.median(means)
+    decoded = (means > thresh).astype(int)
+    return float((decoded == np.asarray(bits)).mean())
+
+
+def main():
+    rng = np.random.default_rng(0)
+    bits = list(rng.integers(0, 2, size=64))
+    accs = {}
+    for spec in (False, True):
+        probes, sends = run(spec, bits)
+        acc = decode(probes, sends, bits)
+        accs[spec] = acc
+        mode = "with specialization" if spec else "no specialization"
+        print(f"{mode:22s}: covert-channel decode accuracy {acc*100:5.1f}% "
+              f"({'OPEN' if acc > 0.75 else 'closed'})")
+    print("\n-> the frequency side channel is readable without "
+          "specialization and closed by it (paper §1, isolation breach).")
+    return accs
+
+
+if __name__ == "__main__":
+    main()

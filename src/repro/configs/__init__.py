@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    ArchConfig, MoEConfig, MLAConfig, SSMConfig, RWKVConfig,
+    EncDecConfig, HybridConfig, ShapeConfig, SHAPES,
+)
+from repro.configs.registry import (
+    arch_ids, get_arch, get_shape, all_cells, cell_is_runnable,
+)

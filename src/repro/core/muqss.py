@@ -1,0 +1,194 @@
+"""MuQSS-style scheduler with the paper's core-specialization extension.
+
+Faithful to §3.1–3.2:
+
+  * per-core deadline run queues, replicated 3x (scalar / AVX / untyped);
+  * scalar cores pick only from {scalar, untyped};
+  * AVX cores pick from all queues but deprioritize scalar tasks by a
+    large deadline penalty (same trick MuQSS uses for idle-priority);
+  * earliest-deadline work stealing across all cores does the load
+    balancing (a core selecting its next task checks every other core's
+    minimum deadline locklessly);
+  * when a scalar task becomes an AVX task on a scalar core, it is put
+    back on a run queue and a scalar task running on an AVX core is
+    preempted via IPI so the AVX core picks the new AVX task;
+  * untyped tasks run anywhere (system tasks pinned to AVX cores must not
+    be starved — they do not get the scalar penalty).
+
+Virtual deadlines: MuQSS computes deadline = niffies + prio_ratio *
+rr_interval; with equal priorities this is FIFO-ish within a quantum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.runqueue import CoreRunQueues
+from repro.core.task import Task, TaskType
+
+SCALAR_PENALTY = 1e12          # added to scalar deadlines on AVX cores
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    n_cores: int = 12
+    n_avx_cores: int = 2               # paper: last two physical cores
+    rr_interval_us: float = 6_000.0    # MuQSS default 6 ms
+    specialization: bool = True        # off -> plain MuQSS (baseline)
+    migration_cost_us: float = 0.15    # per cross-core migration (Fig. 7)
+    sched_cost_us: float = 0.05        # per scheduler invocation
+    ipi_cost_us: float = 0.15          # preemption IPI delivery
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedConfig):
+        self.cfg = cfg
+        self.rqs = [CoreRunQueues(i) for i in range(cfg.n_cores)]
+        self.avx_cores: Set[int] = set(
+            range(cfg.n_cores - cfg.n_avx_cores, cfg.n_cores)) \
+            if cfg.specialization else set()
+        self.running: Dict[int, Optional[Task]] = {
+            i: None for i in range(cfg.n_cores)}
+        self.preempt_requests: Set[int] = set()
+        # stats
+        self.migrations = 0
+        self.type_changes = 0
+        self.steals = 0
+        self.ipis = 0
+        self.invocations = 0
+
+    # ------------------------------------------------------------ helpers
+
+    def is_avx_core(self, core: int) -> bool:
+        return core in self.avx_cores
+
+    def allowed_queues(self, core: int) -> Tuple[TaskType, ...]:
+        if not self.cfg.specialization:
+            return (TaskType.SCALAR, TaskType.AVX, TaskType.UNTYPED)
+        if self.is_avx_core(core):
+            return (TaskType.AVX, TaskType.UNTYPED, TaskType.SCALAR)
+        return (TaskType.SCALAR, TaskType.UNTYPED)
+
+    def deadline_penalty(self, core: int) -> Dict[TaskType, float]:
+        if self.cfg.specialization and self.is_avx_core(core):
+            return {TaskType.SCALAR: SCALAR_PENALTY}
+        return {}
+
+    def set_deadline(self, task: Task, now: float):
+        task.deadline = now + self.cfg.rr_interval_us
+
+    # ----------------------------------------------------------- enqueue
+
+    def enqueue(self, task: Task, now: float, fresh_deadline: bool = True):
+        if fresh_deadline:
+            self.set_deadline(task, now)
+        core = self._choose_core(task)
+        self.rqs[core].push(task)
+        return core
+
+    def _choose_core(self, task: Task) -> int:
+        """Queue on the allowed core with the fewest queued tasks,
+        preferring the task's last core (cache affinity)."""
+        if not self.cfg.specialization:
+            cands = range(self.cfg.n_cores)
+        elif task.ttype == TaskType.AVX:
+            cands = sorted(self.avx_cores)
+        else:
+            cands = [c for c in range(self.cfg.n_cores)
+                     if c not in self.avx_cores] or list(range(self.cfg.n_cores))
+        if task.last_core in cands and self.rqs[task.last_core].total() == 0:
+            return task.last_core
+        return min(cands, key=lambda c: self.rqs[c].total())
+
+    # --------------------------------------------------------- pick next
+
+    def pick_next(self, core: int, now: float) -> Optional[Task]:
+        """MuQSS selection: best deadline among own queues and every other
+        core's queues (lockless steal)."""
+        self.invocations += 1
+        allowed = self.allowed_queues(core)
+        penalty = self.deadline_penalty(core)
+        best = None  # (deadline, rq_index, ttype)
+        for rq in self.rqs:
+            m = rq.min_deadline(allowed, penalty)
+            if m is None:
+                continue
+            d, q = m
+            # eligibility: a task queued on an AVX core's scalar queue may
+            # be stolen by scalar cores and vice versa — queues are global
+            # in eligibility, local in placement.
+            if best is None or d < best[0]:
+                best = (d, rq.core_id, q)
+        if best is None:
+            return None
+        _, rq_id, q = best
+        task = self.rqs[rq_id].pop_type(q)
+        if task is None:
+            return None
+        if rq_id != core:
+            self.steals += 1
+        if task.last_core is not None and task.last_core != core:
+            task.migrations += 1
+            self.migrations += 1
+        task.running_on = core
+        self.running[core] = task
+        return task
+
+    # -------------------------------------------------------- type change
+
+    def on_type_change(self, task: Task, new_type: TaskType, now: float
+                       ) -> Tuple[bool, Optional[int]]:
+        """Returns (must_requeue, preempt_core).
+
+        must_requeue: the task must stop running on its current core
+        (paper: an AVX task on a scalar core is suspended immediately).
+        preempt_core: an AVX core currently running a scalar task that
+        should receive an IPI so it can pick up the new AVX task.
+        """
+        task.type_changes += 1
+        self.type_changes += 1
+        old = task.ttype
+        task.ttype = new_type
+        if not self.cfg.specialization:
+            return (False, None)
+        core = task.running_on
+        if new_type == TaskType.AVX and core is not None \
+                and not self.is_avx_core(core):
+            # scalar core must never run AVX work: suspend + requeue
+            preempt = None
+            for c in self.avx_cores:
+                r = self.running.get(c)
+                if r is not None and r.ttype == TaskType.SCALAR:
+                    preempt = c
+                    break
+                if r is None:
+                    preempt = None  # an idle AVX core will naturally pick it
+                    break
+            if preempt is not None:
+                self.ipis += 1
+                self.preempt_requests.add(preempt)
+            return (True, preempt)
+        if new_type == TaskType.SCALAR and core is not None \
+                and self.is_avx_core(core):
+            # allowed (asymmetric policy) — keep running, no migration,
+            # unless an AVX task is waiting for this core
+            waiting = any(len(self.rqs[c].queues[TaskType.AVX]) > 0
+                          for c in self.avx_cores)
+            if waiting:
+                return (True, None)
+            return (False, None)
+        return (False, None)
+
+    def should_preempt(self, core: int) -> bool:
+        if core in self.preempt_requests:
+            self.preempt_requests.discard(core)
+            return True
+        return False
+
+    def on_done(self, task: Task, core: int):
+        self.running[core] = None
+        task.running_on = None
+        task.last_core = core
+
+    def queued_total(self) -> int:
+        return sum(rq.total() for rq in self.rqs)

@@ -1,0 +1,86 @@
+"""Deadline-sorted run queues with MuQSS semantics.
+
+MuQSS keeps one skip-list run queue per physical core, sorted by virtual
+deadline, and replicates it three ways in the paper's extension (scalar /
+AVX / untyped). A binary heap gives the same ordering semantics; lazy
+deletion stands in for the lockless removal.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.task import Task, TaskType
+
+QUEUES = (TaskType.SCALAR, TaskType.AVX, TaskType.UNTYPED)
+
+
+class DeadlineQueue:
+    """Min-heap by (deadline, seq) with lazy removal."""
+
+    def __init__(self):
+        self._h: List[Tuple[float, int, Task]] = []
+        self._seq = itertools.count()
+        self._gone: set = set()
+        self._n = 0
+
+    def push(self, task: Task):
+        heapq.heappush(self._h, (task.deadline, next(self._seq), task))
+        self._n += 1
+
+    def remove(self, task: Task):
+        self._gone.add(task.tid)
+        self._n -= 1
+
+    def _settle(self):
+        while self._h and self._h[0][2].tid in self._gone:
+            _, _, t = heapq.heappop(self._h)
+            self._gone.discard(t.tid)
+
+    def peek(self) -> Optional[Task]:
+        self._settle()
+        return self._h[0][2] if self._h else None
+
+    def pop(self) -> Optional[Task]:
+        self._settle()
+        if not self._h:
+            return None
+        self._n -= 1
+        return heapq.heappop(self._h)[2]
+
+    def __len__(self):
+        return max(self._n, 0)
+
+
+@dataclass
+class CoreRunQueues:
+    """The paper's 3-way replicated per-core run queue (§3.2)."""
+    core_id: int
+    queues: Dict[TaskType, DeadlineQueue] = field(
+        default_factory=lambda: {q: DeadlineQueue() for q in QUEUES})
+
+    def push(self, task: Task):
+        self.queues[task.ttype].push(task)
+
+    def remove(self, task: Task):
+        self.queues[task.ttype].remove(task)
+
+    def min_deadline(self, allowed: Tuple[TaskType, ...],
+                     penalty: Dict[TaskType, float]) -> Optional[Tuple[float, TaskType]]:
+        best = None
+        for q in allowed:
+            t = self.queues[q].peek()
+            if t is None:
+                continue
+            d = t.deadline + penalty.get(q, 0.0)
+            if best is None or d < best[0]:
+                best = (d, q)
+        return best
+
+    def pop_type(self, q: TaskType) -> Optional[Task]:
+        return self.queues[q].pop()
+
+    def total(self) -> int:
+        return sum(len(q) for q in self.queues.values())

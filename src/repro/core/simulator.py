@@ -1,0 +1,213 @@
+"""Discrete-event simulator: cores x license model x MuQSS scheduler.
+
+Tasks are generators yielding Segment (code), TypeChange (the paper's
+with_avx()/without_avx() syscalls) or RequestDone (workload bookkeeping).
+The simulator charges scheduler invocation / migration / IPI costs from
+SchedConfig, integrates per-core frequency through the license state
+machine, and collects everything Figs. 5/6/7 need: throughput, per-core
+frequency averages, migration counts, throttle cycles and flame-graph
+attribution (§3.3).
+
+Preemption granularity: long segments are executed in <=250 µs chunks and
+IPI preemption takes effect at chunk boundaries (µs-scale, matching the
+prototype's IPI latency class).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.license import CoreLicense, LicenseConfig
+from repro.core.muqss import SchedConfig, Scheduler
+from repro.core.task import IClass, Segment, Task, TaskType, TypeChange
+
+CHUNK_US = 25.0   # preemption (IPI) granularity
+
+
+@dataclass
+class RequestDone:
+    """Yielded by workload generators when one request completes."""
+    kind: str = "request"
+
+
+@dataclass
+class Metrics:
+    completed: int = 0
+    latencies_us: List[float] = field(default_factory=list)
+    completions: List[Tuple[float, float, str]] = field(default_factory=list)
+    #            (t_done_us, latency_us, task_name)
+    flame_throttle: Dict[Tuple[str, ...], float] = field(default_factory=dict)
+    flame_cycles: Dict[Tuple[str, ...], float] = field(default_factory=dict)
+    busy_us: float = 0.0
+    total_us: float = 0.0
+
+    def throughput_per_s(self) -> float:
+        return self.completed / (self.total_us / 1e6) if self.total_us else 0.0
+
+    def p(self, q: float) -> float:
+        if not self.latencies_us:
+            return 0.0
+        xs = sorted(self.latencies_us)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+class Simulator:
+    def __init__(self, sched_cfg: SchedConfig,
+                 lic_cfg: LicenseConfig = LicenseConfig(),
+                 ipc_locality_bonus: float = 0.0):
+        """ipc_locality_bonus: fractional IPC gain on cores with a reduced
+        code footprint under specialization (paper §4.2 measured +0.7%)."""
+        self.sched = Scheduler(sched_cfg)
+        self.lic = [CoreLicense(lic_cfg) for _ in range(sched_cfg.n_cores)]
+        self.cfg = sched_cfg
+        self.ipc_bonus = ipc_locality_bonus
+        self.metrics = Metrics()
+        self._events: List[Tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self._idle: set = set(range(sched_cfg.n_cores))
+        self._quantum_end: Dict[int, float] = {}
+        self._req_start: Dict[int, float] = {}
+
+    # ------------------------------------------------------------ events
+
+    def _push(self, t: float, kind: str, payload):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def add_task(self, task: Task, at: float = 0.0):
+        self._push(at, "arrive", task)
+
+    # ------------------------------------------------------------- main
+
+    def run(self, until_us: float):
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > until_us:
+                break
+            if kind == "arrive":
+                self._on_arrive(t, payload)
+            elif kind == "pick":
+                self._on_pick(t, payload)
+            elif kind == "chunk":
+                self._on_chunk(t, *payload)
+        self.metrics.total_us = until_us
+        return self.metrics
+
+    def _on_arrive(self, t: float, task: Task):
+        task.created_t = t
+        self._req_start[task.tid] = t
+        self.sched.enqueue(task, t)
+        self._kick(t, task.ttype)
+
+    def _kick(self, t: float, ttype: TaskType):
+        """Wake an idle core allowed to run this task type."""
+        for core in sorted(self._idle):
+            if ttype == TaskType.AVX and self.cfg.specialization \
+                    and not self.sched.is_avx_core(core):
+                continue
+            self._idle.discard(core)
+            self._push(t, "pick", core)
+            return
+
+    def _on_pick(self, t: float, core: int):
+        task = self.sched.pick_next(core, t)
+        if task is None:
+            self._idle.add(core)
+            return
+        cost = self.cfg.sched_cost_us
+        if task.last_core is not None and task.last_core != core:
+            cost += self.cfg.migration_cost_us
+        self._quantum_end[core] = t + cost + self.cfg.rr_interval_us
+        self._push(t + cost, "chunk", (core, task))
+
+    def _requeue(self, t: float, core: int, task: Task,
+                 fresh_deadline: bool):
+        self.sched.on_done(task, core)
+        self.sched.enqueue(task, t, fresh_deadline=fresh_deadline)
+        self._kick(t, task.ttype)
+        self._push(t, "pick", core)
+
+    def _on_chunk(self, t: float, core: int, task: Task):
+        item = task.next_segment()
+        if item is None:
+            task.done = True
+            task.finished_t = t
+            self.sched.on_done(task, core)
+            self._push(t, "pick", core)
+            return
+        if isinstance(item, TypeChange):
+            task.current_seg = None
+            requeue, _preempt = self.sched.on_type_change(
+                task, item.new_type, t)
+            if requeue:
+                self._requeue(t + self.cfg.ipi_cost_us, core, task,
+                              fresh_deadline=False)
+            else:
+                self._push(t, "chunk", (core, task))
+            return
+        if isinstance(item, RequestDone):
+            task.current_seg = None
+            self.metrics.completed += 1
+            t0 = self._req_start.get(task.tid, t)
+            self.metrics.latencies_us.append(t - t0)
+            self.metrics.completions.append((t, t - t0, task.name))
+            self._req_start[task.tid] = t
+            self._push(t, "chunk", (core, task))
+            return
+        seg: Segment = item
+        lic = self.lic[core]
+        nominal_chunk = CHUNK_US * lic.cfg.freqs_ghz[0] * 1000.0
+        remaining = seg.cycles - task.seg_done_cycles
+        run = min(remaining, nominal_chunk)
+        if self.ipc_bonus and self.cfg.specialization \
+                and seg.iclass == IClass.SCALAR:
+            run_eff = run / (1.0 + self.ipc_bonus)
+        else:
+            run_eff = run
+        thr0 = lic.throttle_cycles
+        t_end = lic.execute(t, run_eff, seg.iclass, seg.dense)
+        self.metrics.busy_us += t_end - t
+        if seg.stack:
+            dthr = lic.throttle_cycles - thr0
+            fm = self.metrics.flame_throttle
+            fm[seg.stack] = fm.get(seg.stack, 0.0) + dthr
+            fc = self.metrics.flame_cycles
+            fc[seg.stack] = fc.get(seg.stack, 0.0) + run
+        task.seg_done_cycles += run
+        if task.seg_done_cycles >= seg.cycles - 1e-6:
+            task.current_seg = None
+        # preemption / quantum checks at chunk boundary
+        if self.sched.should_preempt(core):
+            self._requeue(t_end + self.cfg.ipi_cost_us, core, task,
+                          fresh_deadline=False)
+            return
+        if t_end >= self._quantum_end.get(core, float("inf")):
+            self._requeue(t_end, core, task, fresh_deadline=True)
+            return
+        self._push(t_end, "chunk", (core, task))
+
+    # ------------------------------------------------------------- stats
+
+    def avg_frequency_ghz(self) -> float:
+        """Time-weighted average frequency over busy time (Fig. 6)."""
+        wsum, tsum = 0.0, 0.0
+        for lic in self.lic:
+            avg, tt = lic.freq_time_integral()
+            wsum += avg * tt
+            tsum += tt
+        return wsum / tsum if tsum else self.lic[0].cfg.freqs_ghz[0]
+
+    def counters(self) -> Dict[str, float]:
+        """CORE_POWER.* counter totals (§3.3)."""
+        return {
+            "LVL0_TURBO_LICENSE": sum(l.cycles_at_level[0] for l in self.lic),
+            "LVL1_TURBO_LICENSE": sum(l.cycles_at_level[1] for l in self.lic),
+            "LVL2_TURBO_LICENSE": sum(l.cycles_at_level[2] for l in self.lic),
+            "THROTTLE": sum(l.throttle_cycles for l in self.lic),
+            "transitions": sum(l.transitions for l in self.lic),
+            "migrations": self.sched.migrations,
+            "type_changes": self.sched.type_changes,
+            "steals": self.sched.steals,
+            "ipis": self.sched.ipis,
+        }

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------- chacha20
+
+_CONSTANTS = jnp.array([0x61707865, 0x3320646e, 0x79622d32, 0x6b206574],
+                       dtype=jnp.uint32)
+_QR = [(0, 4, 8, 12), (1, 5, 9, 13), (2, 6, 10, 14), (3, 7, 11, 15),
+       (0, 5, 10, 15), (1, 6, 11, 12), (2, 7, 8, 13), (3, 4, 9, 14)]
+
+
+def _rotl(x, n):
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def chacha20_keystream_ref(key, nonce, counter0, n_blocks) -> jnp.ndarray:
+    """[n_blocks, 16] u32 keystream, one 64-byte block per row."""
+    key = key.astype(jnp.uint32)
+    nonce = nonce.astype(jnp.uint32)
+    counters = jnp.uint32(counter0) + jnp.arange(n_blocks, dtype=jnp.uint32)
+    state = jnp.concatenate([
+        jnp.broadcast_to(_CONSTANTS[:, None], (4, n_blocks)),
+        jnp.broadcast_to(key[:, None], (8, n_blocks)),
+        counters[None, :],
+        jnp.broadcast_to(nonce[:, None], (3, n_blocks)),
+    ], axis=0)                                  # [16, N]
+    x = state
+
+    def qr(x, a, b, c, d):
+        xa, xb, xc, xd = x[a], x[b], x[c], x[d]
+        xa = xa + xb
+        xd = _rotl(xd ^ xa, 16)
+        xc = xc + xd
+        xb = _rotl(xb ^ xc, 12)
+        xa = xa + xb
+        xd = _rotl(xd ^ xa, 8)
+        xc = xc + xd
+        xb = _rotl(xb ^ xc, 7)
+        return x.at[a].set(xa).at[b].set(xb).at[c].set(xc).at[d].set(xd)
+
+    for _ in range(10):
+        for a, b, c, d in _QR:
+            x = qr(x, a, b, c, d)
+    return (x + state).T                        # [N, 16]
+
+
+# ------------------------------------------------------- flash attention
+
+
+def attention_ref(q, k, v, *, causal: bool, scale=None) -> jnp.ndarray:
+    """q [B,H,S,D], k/v [B,KVH,S,D] -> [B,H,S,D] (fp32 math)."""
+    B, H, Sq, D = q.shape
+    KVH, Skv = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, Sq, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale=None) -> jnp.ndarray:
+    """q [B,H,D], k/v [B,KVH,S,D], lengths [B] -> [B,H,D]."""
+    B, H, D = q.shape
+    KVH, S = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,bktd->bkgt", qf, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

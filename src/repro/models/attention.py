@@ -1,0 +1,250 @@
+"""Attention blocks: GQA (with optional QK-norm / bias) and DeepSeek MLA.
+
+Each block exposes:
+  init(key, cfg, dtype) -> params
+  forward(params, x, cfg, positions) -> y                  (full sequence)
+  init_cache(cfg, batch, max_seq, dtype) -> cache
+  prefill(params, x, cfg, cache, positions) -> (y, cache)  (writes cache)
+  decode(params, x, cfg, cache, lengths) -> (y, cache)     (x is [B,1,d])
+
+MLA caches the compressed latent (c_kv + k_rope) and uses the absorbed
+matmul form for decode (W_uk folded into q, W_uv applied post-attention),
+so decode cost is O(S * kv_lora) per head rather than O(S * head_dims)
+after decompression. ``decode_naive`` keeps the decompressing variant as
+a cross-check oracle (see tests/test_mla.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models.layers import (
+    apply_rope, chunked_attention, decode_attention, dense, dt, init_dense,
+    rmsnorm,
+)
+
+# =========================================================== GQA attention
+
+
+def gqa_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, cfg.kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, cfg.kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if getattr(cfg, "qk_norm", False):
+        p["q_scale"] = jnp.ones((hd,), dtype=dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype=dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = dt(cfg.compute_dtype)
+    q = dense(p["wq"], x, cdt).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x, cdt).reshape(B, S, cfg.kv_heads, hd)
+    v = dense(p["wv"], x, cdt).reshape(B, S, cfg.kv_heads, hd)
+    if "q_scale" in p:
+        q = rmsnorm(q, p["q_scale"])
+        k = rmsnorm(k, p["k_scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ArchConfig, positions, causal=True):
+    cdt = dt(cfg.compute_dtype)
+    q, k, v = _qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=causal,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                          q_positions=positions, kv_positions=positions,
+                          compute_dtype=cdt)
+    B, S = x.shape[:2]
+    return dense(p["wo"], o.reshape(B, S, -1), cdt)
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    shp = (batch, max_seq, cfg.kv_heads, hd)
+    return {"k": jnp.zeros(shp, dtype=dtype), "v": jnp.zeros(shp, dtype=dtype)}
+
+
+def gqa_prefill(p, x, cfg: ArchConfig, cache, positions):
+    """Full-sequence forward that also fills cache[:, :S]."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+             "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)}
+    cdt = dt(cfg.compute_dtype)
+    o = chunked_attention(q, k, v, causal=True,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                          q_positions=positions, kv_positions=positions,
+                          compute_dtype=cdt)
+    B = x.shape[0]
+    return dense(p["wo"], o.reshape(B, S, -1), cdt), cache
+
+
+def gqa_decode(p, x, cfg: ArchConfig, cache, lengths):
+    """x: [B,1,d]; lengths[b] = number of tokens BEFORE this one."""
+    B = x.shape[0]
+    cdt = dt(cfg.compute_dtype)
+    positions = lengths[:, None]                            # [B,1]
+    q, k, v = _qkv(p, x, cfg, positions)
+    bidx = jnp.arange(B)
+    kc = cache["k"].at[bidx, lengths, :, :].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, lengths, :, :].set(v[:, 0].astype(cache["v"].dtype))
+    o = decode_attention(q, kc, vc, lengths + 1, compute_dtype=cdt)
+    return dense(p["wo"], o.reshape(B, 1, -1), cdt), {"k": kc, "v": vc}
+
+
+# =========================================================== MLA attention
+
+
+def mla_init(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla or MLAConfig()
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_dense(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype=dtype),
+        "wq_b": init_dense(ks[1], m.q_lora_rank, H * qk, dtype),
+        "wkv_a": init_dense(ks[2], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype=dtype),
+        "wkv_b": init_dense(ks[3], m.kv_lora_rank,
+                            H * (m.nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_dense(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cdt = dt(cfg.compute_dtype)
+    qa = rmsnorm(dense(p["wq_a"], x, cdt), p["q_norm"])
+    q = dense(p["wq_b"], qa, cdt).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    cdt = dt(cfg.compute_dtype)
+    kv_a = dense(p["wkv_a"], x, cdt)                        # [B,S,lora+rope]
+    c_kv = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]          # [B,S,rope] shared
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, cfg: ArchConfig, positions, causal=True):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cdt = dt(cfg.compute_dtype)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    kv = dense(p["wkv_b"], c_kv, cdt).reshape(B, S, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    o = chunked_attention(q, k, v, causal=causal,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                          q_positions=positions, kv_positions=positions,
+                          scale=scale, compute_dtype=cdt)
+    return dense(p["wo"], o.reshape(B, S, -1), cdt)
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype=dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.rope_head_dim), dtype=dtype)}
+
+
+def mla_prefill(p, x, cfg: ArchConfig, cache, positions):
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    cache = {"c_kv": jax.lax.dynamic_update_slice_in_dim(
+                 cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1),
+             "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                 cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1)}
+    y = mla_forward(p, x, cfg, positions)
+    return y, cache
+
+
+def _mla_wkv_b_split(p, cfg):
+    m = cfg.mla
+    H = cfg.n_heads
+    w = p["wkv_b"]["w"].reshape(m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
+    return w[..., :m.nope_head_dim], w[..., m.nope_head_dim:]  # [lora,H,nope],[lora,H,v]
+
+
+def mla_decode(p, x, cfg: ArchConfig, cache, lengths):
+    """Absorbed-form decode: score/readout in the compressed latent space."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    cdt = dt(cfg.compute_dtype)
+    positions = lengths[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)           # [B,1,H,*]
+    c_kv_new, k_rope_new = _mla_latent(p, x, cfg, positions)
+    bidx = jnp.arange(B)
+    ckv = cache["c_kv"].at[bidx, lengths, :].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+    krp = cache["k_rope"].at[bidx, lengths, :].set(k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+    w_uk, w_uv = _mla_wkv_b_split(p, cfg)
+    # absorb W_uk into q: q_lat [B,1,H,lora]
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(cdt), w_uk.astype(cdt),
+                       preferred_element_type=jnp.float32)
+    Smax = ckv.shape[1]
+    s = (jnp.einsum("bshl,btl->bhst", q_lat.astype(cdt), ckv.astype(cdt),
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(cdt), krp.astype(cdt),
+                      preferred_element_type=jnp.float32))
+    s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    valid = (jnp.arange(Smax)[None, :] < (lengths + 1)[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)                      # [B,H,1,Smax]
+    o_lat = jnp.einsum("bhst,btl->bshl", pattn.astype(cdt), ckv.astype(cdt),
+                       preferred_element_type=jnp.float32)  # [B,1,H,lora]
+    o = jnp.einsum("bshl,lhv->bshv", o_lat.astype(cdt), w_uv.astype(cdt),
+                   preferred_element_type=jnp.float32)      # [B,1,H,v]
+    y = dense(p["wo"], o.reshape(B, 1, H * m.v_head_dim).astype(cdt), cdt)
+    return y, {"c_kv": ckv, "k_rope": krp}
+
+
+def mla_decode_naive(p, x, cfg: ArchConfig, cache, lengths):
+    """Decompress-then-attend decode (oracle for the absorbed form)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    cdt = dt(cfg.compute_dtype)
+    positions = lengths[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv_new, k_rope_new = _mla_latent(p, x, cfg, positions)
+    bidx = jnp.arange(B)
+    ckv = cache["c_kv"].at[bidx, lengths, :].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+    krp = cache["k_rope"].at[bidx, lengths, :].set(k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+    kv = dense(p["wkv_b"], ckv.astype(cdt), cdt)
+    Smax = ckv.shape[1]
+    kv = kv.reshape(B, Smax, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krp[:, :, None, :].astype(cdt), (B, Smax, H, m.rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    o = decode_attention(q, k, v, lengths + 1, scale=scale, compute_dtype=cdt)
+    y = dense(p["wo"], o.reshape(B, 1, -1), cdt)
+    return y, {"c_kv": ckv, "k_rope": krp}

@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a stub: the encoder consumes precomputed frame
+embeddings [B, n_frames, d_model] (``input_specs`` supplies them). The
+published model uses bounded absolute positions; this backbone uses RoPE
+so the assigned 32k-decode shapes are well-defined (see config docstring).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import DistContext, no_dist
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_norm, chunked_attention, decode_attention, dense, dt as _dt,
+    init_dense, init_embedding, init_mlp, init_norm, mlp, unembed,
+)
+
+
+def _xattn_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": init_dense(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+            "wk": init_dense(ks[1], d, cfg.kv_heads * hd, dtype),
+            "wv": init_dense(ks[2], d, cfg.kv_heads * hd, dtype),
+            "wo": init_dense(ks[3], cfg.n_heads * hd, d, dtype)}
+
+
+def encdec_init(key, cfg: ArchConfig, dist: DistContext = no_dist()) -> dict:
+    dtype = _dt(cfg.param_dtype)
+    e = cfg.enc_dec
+    ks = jax.random.split(key, 4)
+
+    def enc_layer(k_):
+        k1, k2 = jax.random.split(k_)
+        return {"attn": attn.gqa_init(k1, cfg, dtype),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.glu, dtype),
+                "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+                "norm2": init_norm(cfg.d_model, cfg.norm, dtype)}
+
+    def dec_layer(k_):
+        k1, k2, k3 = jax.random.split(k_, 3)
+        return {"self": attn.gqa_init(k1, cfg, dtype),
+                "cross": _xattn_init(k2, cfg, dtype),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.glu, dtype),
+                "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+                "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+                "norm3": init_norm(cfg.d_model, cfg.norm, dtype)}
+
+    return {
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[0], e.n_encoder_layers)),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "embed": init_embedding(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, dist: DistContext = no_dist(),
+           remat: str = "none"):
+    """frames [B, T, d] (stubbed frontend output) -> [B, T, d]."""
+    B, T, _ = frames.shape
+    cdt = _dt(cfg.compute_dtype)
+    x = frames.astype(cdt)
+    positions = jnp.arange(T)[None, :].repeat(B, 0)
+
+    def body(x, p_l):
+        h = apply_norm(p_l["norm1"], x, cfg.norm)
+        y = attn.gqa_forward(p_l["attn"], h, cfg, positions, causal=False)
+        x = x + y
+        h = apply_norm(p_l["norm2"], x, cfg.norm)
+        return x + mlp(p_l["mlp"], h, cfg.act, cfg.glu, cdt), None
+
+    f = jax.checkpoint(body) if remat != "none" else body
+    x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def _cross_fwd(p, x, enc_kv, cfg):
+    """x [B,S,d] attends over precomputed encoder k/v."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = _dt(cfg.compute_dtype)
+    q = dense(p["wq"], x, cdt).reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    o = chunked_attention(q, k, v, causal=False,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=0,
+                          compute_dtype=cdt)
+    return dense(p["wo"], o.reshape(B, S, -1), cdt)
+
+
+def _enc_kv(p, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    cdt = _dt(cfg.compute_dtype)
+    k = dense(p["wk"], enc_out, cdt).reshape(B, T, cfg.kv_heads, hd)
+    v = dense(p["wv"], enc_out, cdt).reshape(B, T, cfg.kv_heads, hd)
+    return k, v
+
+
+def decode_forward(params, tokens, enc_out, cfg: ArchConfig,
+                   dist: DistContext = no_dist(), remat: str = "none"):
+    """Teacher-forced decoder: tokens [B,S] + enc_out -> logits [B,S,V]."""
+    B, S = tokens.shape
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    def body(x, p_l):
+        h = apply_norm(p_l["norm1"], x, cfg.norm)
+        x = x + attn.gqa_forward(p_l["self"], h, cfg, positions)
+        h = apply_norm(p_l["norm2"], x, cfg.norm)
+        x = x + _cross_fwd(p_l["cross"], h, _enc_kv(p_l["cross"], enc_out, cfg), cfg)
+        h = apply_norm(p_l["norm3"], x, cfg.norm)
+        return x + mlp(p_l["mlp"], h, cfg.act, cfg.glu, cdt), None
+
+    f = jax.checkpoint(body) if remat != "none" else body
+    x, _ = jax.lax.scan(f, x, params["dec_layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return unembed(x, params["embed"], cdt)   # tied head
+
+
+def encdec_loss(params, frames, tokens, targets, cfg: ArchConfig,
+                dist: DistContext = no_dist(), remat: str = "none"):
+    enc_out = encode(params, frames, cfg, dist, remat)
+    logits = decode_forward(params, tokens, enc_out, cfg, dist, remat)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold), {"ce": jnp.mean(logz - gold)}
+
+
+def encdec_init_cache(params, frames, cfg: ArchConfig, batch: int,
+                      max_seq: int, dist: DistContext = no_dist()):
+    """Runs the encoder; returns decode cache with precomputed cross-KV."""
+    dtype = _dt(cfg.param_dtype)
+    enc_out = encode(params, frames, cfg, dist)
+
+    def per_layer(p_l):
+        k, v = _enc_kv(p_l["cross"], enc_out, cfg)
+        return {"xk": k.astype(dtype), "xv": v.astype(dtype)}
+
+    cross = jax.vmap(per_layer)(params["dec_layers"])
+    self_kv = jax.vmap(lambda _: attn.gqa_init_cache(cfg, batch, max_seq, dtype))(
+        jnp.arange(cfg.n_layers))
+    return {"cross": cross, "self": self_kv}
+
+
+def encdec_decode_step(params, cache, tokens, lengths, cfg: ArchConfig,
+                       dist: DistContext = no_dist()):
+    B = tokens.shape[0]
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    hd = cfg.resolved_head_dim
+
+    def body(carry, sl):
+        x, = carry
+        p_l, c_l = sl
+        h = apply_norm(p_l["norm1"], x, cfg.norm)
+        y, self_kv = attn.gqa_decode(p_l["self"], h, cfg, c_l["self"], lengths)
+        x = x + y
+        h = apply_norm(p_l["norm2"], x, cfg.norm)
+        q = dense(p_l["cross"]["wq"], h, cdt).reshape(B, 1, cfg.n_heads, hd)
+        T = c_l["cross"]["xk"].shape[1]
+        o = decode_attention(q, c_l["cross"]["xk"], c_l["cross"]["xv"],
+                             jnp.full((B,), T), compute_dtype=cdt)
+        x = x + dense(p_l["cross"]["wo"], o.reshape(B, 1, -1), cdt)
+        h = apply_norm(p_l["norm3"], x, cfg.norm)
+        x = x + mlp(p_l["mlp"], h, cfg.act, cfg.glu, cdt)
+        return (x,), {"self": self_kv, "cross": c_l["cross"]}
+
+    (x,), new_cache = jax.lax.scan(body, (x,), (params["dec_layers"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(x, params["embed"], cdt)
+    return logits[:, 0], new_cache

@@ -1,0 +1,164 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-tied shared
+attention/MLP block applied every N backbone layers.
+
+54 Mamba2 layers in 9 groups of 6; after each group the SAME (shared)
+GQA-attention + MLP block runs, with its own per-application KV cache.
+Simplification vs released Zamba2: the shared block input is the plain
+residual stream (the published model concatenates the embedding stream
+and uses two alternating shared blocks + LoRA adapters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.context import DistContext, no_dist
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_norm, dt as _dt, init_embedding, init_mlp, init_norm, mlp, unembed,
+)
+from repro.models.mamba2 import (
+    mamba2_decode, mamba2_forward, mamba2_init, mamba2_init_state,
+    mamba2_prefill,
+)
+
+
+def _groups(cfg: ArchConfig):
+    k = cfg.hybrid.shared_attn_every
+    assert cfg.n_layers % k == 0
+    return cfg.n_layers // k, k
+
+
+def hybrid_init(key, cfg: ArchConfig, dist: DistContext = no_dist()) -> dict:
+    dtype = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    layers = jax.vmap(lambda k_: {"m": mamba2_init(k_, cfg, dtype),
+                                  "norm": init_norm(cfg.d_model, cfg.norm, dtype)})(
+        jax.random.split(ks[0], cfg.n_layers))
+    shared = {
+        "attn": attn.gqa_init(ks[1], cfg, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.glu, dtype),
+        "norm1": init_norm(cfg.d_model, cfg.norm, dtype),
+        "norm2": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    return {"embed": init_embedding(ks[3], cfg.vocab, cfg.d_model, dtype),
+            "layers": layers,
+            "shared": shared,
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+            "unembed": init_embedding(ks[4], cfg.vocab, cfg.d_model, dtype)}
+
+
+def _reshape_groups(tree, ng, k):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(ng, k, *a.shape[1:]), tree)
+
+
+def hybrid_states(cfg: ArchConfig, batch: int, max_seq: int,
+                  dist: DistContext = no_dist()):
+    ng, k = _groups(cfg)
+    m = jax.vmap(lambda _: mamba2_init_state(cfg, batch))(jnp.arange(cfg.n_layers))
+    dtype = _dt(cfg.param_dtype)
+    kv = jax.vmap(lambda _: attn.gqa_init_cache(cfg, batch, max_seq, dtype))(
+        jnp.arange(ng))
+    return {"mamba": m, "kv": kv}
+
+
+def _shared_block_fwd(shared, x, cfg, positions, dist):
+    h = apply_norm(shared["norm1"], x, cfg.norm)
+    y = attn.gqa_forward(shared["attn"], h, cfg, positions)
+    x = x + y
+    h = apply_norm(shared["norm2"], x, cfg.norm)
+    return x + mlp(shared["mlp"], h, cfg.act, cfg.glu, _dt(cfg.compute_dtype))
+
+
+def hybrid_forward(params, tokens, cfg: ArchConfig,
+                   dist: DistContext = no_dist(), remat: str = "none"):
+    """tokens [B,S] -> (logits f32, aux=None-like)."""
+    ng, k = _groups(cfg)
+    B, S = tokens.shape
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    g_layers = _reshape_groups(params["layers"], ng, k)
+
+    def group(x, p_g):
+        def inner(x, p_l):
+            h = apply_norm(p_l["norm"], x, cfg.norm)
+            y, _ = mamba2_forward(p_l["m"], h, cfg)
+            return x + y.astype(x.dtype), None
+        x, _ = jax.lax.scan(inner, x, p_g)
+        x = _shared_block_fwd(params["shared"], x, cfg, positions, dist)
+        return x, None
+
+    f = jax.checkpoint(group) if remat != "none" else group
+    x, _ = jax.lax.scan(f, x, g_layers)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return unembed(x, params["unembed"], cdt), None
+
+
+def hybrid_prefill(params, tokens, cfg: ArchConfig, states,
+                   dist: DistContext = no_dist()):
+    ng, k = _groups(cfg)
+    B, S = tokens.shape
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    g_layers = _reshape_groups(params["layers"], ng, k)
+    g_mamba = _reshape_groups(states["mamba"], ng, k)
+
+    def group(x, sl):
+        p_g, st_g, kv_g = sl
+
+        def inner(x, sl2):
+            p_l, st_l = sl2
+            h = apply_norm(p_l["norm"], x, cfg.norm)
+            y, st2 = mamba2_prefill(p_l["m"], h, cfg, st_l)
+            return x + y.astype(x.dtype), st2
+        x, st_g2 = jax.lax.scan(inner, x, (p_g, st_g))
+        h = apply_norm(params["shared"]["norm1"], x, cfg.norm)
+        y, kv_g2 = attn.gqa_prefill(params["shared"]["attn"], h, cfg, kv_g,
+                                    positions)
+        x = x + y
+        h = apply_norm(params["shared"]["norm2"], x, cfg.norm)
+        x = x + mlp(params["shared"]["mlp"], h, cfg.act, cfg.glu, cdt)
+        return x, (st_g2, kv_g2)
+
+    x, (m2, kv2) = jax.lax.scan(group, x, (g_layers, g_mamba, states["kv"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(x[:, -1:, :], params["unembed"], cdt)
+    m2 = jax.tree_util.tree_map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), m2)
+    return logits[:, 0], {"mamba": m2, "kv": kv2}
+
+
+def hybrid_decode_step(params, states, tokens, lengths, cfg: ArchConfig,
+                       dist: DistContext = no_dist()):
+    ng, k = _groups(cfg)
+    B = tokens.shape[0]
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    g_layers = _reshape_groups(params["layers"], ng, k)
+    g_mamba = _reshape_groups(states["mamba"], ng, k)
+
+    def group(x, sl):
+        p_g, st_g, kv_g = sl
+
+        def inner(x, sl2):
+            p_l, st_l = sl2
+            h = apply_norm(p_l["norm"], x, cfg.norm)
+            y, st2 = mamba2_decode(p_l["m"], h, cfg, st_l)
+            return x + y.astype(x.dtype), st2
+        x, st_g2 = jax.lax.scan(inner, x, (p_g, st_g))
+        h = apply_norm(params["shared"]["norm1"], x, cfg.norm)
+        y, kv_g2 = attn.gqa_decode(params["shared"]["attn"], h, cfg, kv_g,
+                                   lengths)
+        x = x + y
+        h = apply_norm(params["shared"]["norm2"], x, cfg.norm)
+        x = x + mlp(params["shared"]["mlp"], h, cfg.act, cfg.glu, cdt)
+        return x, (st_g2, kv_g2)
+
+    x, (m2, kv2) = jax.lax.scan(group, x, (g_layers, g_mamba, states["kv"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(x, params["unembed"], cdt)
+    m2 = jax.tree_util.tree_map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), m2)
+    return logits[:, 0], {"mamba": m2, "kv": kv2}

@@ -1,0 +1,225 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent per-channel decay
++ channel-mix, in chunked-parallel form with a recurrent decode path.
+
+Recurrence (per head, k/v dims = head_size):
+    y_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+with w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))  (the Finch decay LoRA).
+
+The chunked form factors decay products as exp(cum_i - cum_j). To keep the
+two factors finite they are recentered by half the chunk's total log-decay
+(the product is exact), and the per-step log-decay is clamped at -5
+(w < e^-5 ≈ 6.7e-3/step is numerically dead within two tokens). The clamp
+is applied identically in the recurrent decode path, so chunked and
+stepwise execution agree to fp32 precision (tested).
+Simplification vs the released Finch: token-shift lerp coefficients are
+static per channel (the data-dependent ddlerp LoRA is omitted); the decay
+LoRA — the architecture's headline feature — is implemented exactly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dt as _dt, rmsnorm
+
+CLAMP_STEP = 5.0   # per-step log-decay floor (see module docstring)
+
+
+def _dims(cfg: ArchConfig):
+    r = cfg.rwkv
+    H = cfg.d_model // r.head_size
+    return r, H, r.head_size
+
+
+def rwkv6_init(key, cfg: ArchConfig, dtype) -> dict:
+    r, H, hs = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    std = 1.0 / math.sqrt(d)
+
+    def w(k, shape, s=std):
+        return (jax.random.normal(k, shape) * s).astype(dtype)
+
+    # decay init: spread half-lives across channels
+    dec = jnp.linspace(-6.0, 1.0, d).reshape(H, hs)
+    return {
+        "tm": {
+            "mu": (0.5 * jnp.ones((5, d))).astype(dtype),   # r,k,v,g,w shifts
+            "wr": w(ks[0], (d, d)), "wk": w(ks[1], (d, d)),
+            "wv": w(ks[2], (d, d)), "wg": w(ks[3], (d, d)),
+            "wo": w(ks[4], (d, d)),
+            "w0": dec.astype(jnp.float32),                  # [H,hs]
+            "wA": w(ks[5], (d, r.decay_lora), 0.01),
+            "wB": w(ks[6], (r.decay_lora, d), 0.01),
+            "u": (jax.random.normal(ks[7], (H, hs)) * 0.1).astype(jnp.float32),
+            "ln": jnp.ones((H, hs), dtype=dtype),           # per-head out norm
+        },
+        "cm": {
+            "mu": (0.5 * jnp.ones((2, d))).astype(dtype),   # k,r shifts
+            "wk": w(ks[8], (d, cfg.d_ff)),
+            "wv": w(ks[9], (cfg.d_ff, d), 1.0 / math.sqrt(cfg.d_ff)),
+            "wr": w(jax.random.fold_in(ks[8], 1), (d, d)),
+        },
+        "ln1": {"scale": jnp.ones((d,), dtype=dtype),
+                "bias": jnp.zeros((d,), dtype=dtype)},
+        "ln2": {"scale": jnp.ones((d,), dtype=dtype),
+                "bias": jnp.zeros((d,), dtype=dtype)},
+    }
+
+
+def _shift(x, x_prev):
+    """x [B,S,d]; x_prev [B,1,d] (last token of previous segment)."""
+    return jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+
+
+def _decay(p_tm, xw, cdt):
+    """w_t in (0,1): [B,S,d] -> log-decay [B,S,d] (negative)."""
+    lora = jnp.dot(jnp.tanh(jnp.dot(xw.astype(cdt), p_tm["wA"].astype(cdt))),
+                   p_tm["wB"].astype(cdt)).astype(jnp.float32)
+    H, hs = p_tm["w0"].shape
+    base = p_tm["w0"].reshape(1, 1, H * hs)
+    return jnp.maximum(-jnp.exp(base + lora), -CLAMP_STEP)  # log w_t in [-5,0]
+
+
+def _wkv_chunked(r, k, v, lw, u, S0, chunk):
+    """r,k,v [B,S,H,hs]; lw [B,S,H,hs] log-decay; u [H,hs];
+    S0 [B,H,hs,hs] (k-dim x v-dim). Returns (y, S_final)."""
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    def to_chunks(a):
+        return a.reshape(B, nc, Q, H, K).swapaxes(0, 1)
+
+    rc, kc, vc, lc = map(to_chunks, (r, k, v, lw))
+
+    def step(Sst, blk):
+        rq, kq, vq, lq = blk                                # [B,Q,H,K]
+        cum = jnp.cumsum(lq, axis=1)                        # inclusive, <=0
+        ecum = cum - lq                                     # exclusive
+        # recenter so exp() stays finite; a*b is exact: exp(ecum_i - cum_j)
+        c = cum[:, -1:, :, :] * 0.5                         # [B,1,H,K]
+        a = rq * jnp.exp(ecum - c)                          # [B,Q,H,K]
+        b = kq * jnp.exp(c - cum)
+        att = jnp.einsum("bihk,bjhk->bhij", a, b)           # j<i strict
+        tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        bonus = jnp.einsum("bihk,bihk->bih", rq * u[None, None], kq)
+        y = jnp.einsum("bhij,bjhv->bihv", att, vq) \
+            + bonus[..., None] * vq \
+            + jnp.einsum("bihk,bhkv->bihv", rq * jnp.exp(ecum), Sst)
+        # state: S_new = diag(exp(cum_Q)) S + sum_j exp(cum_Q - cum_j) k_j v_j
+        dend = jnp.exp(cum[:, -1:, :, :] - cum)
+        S_new = jnp.exp(cum[:, -1])[..., None] * Sst \
+            + jnp.einsum("bjhk,bjhv->bhkv", kq * dend, vq)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(step, S0, (rc, kc, vc, lc))
+    return ys.swapaxes(0, 1).reshape(B, S, H, K), S_fin
+
+
+def rwkv6_time_mix(p_tm, x, cfg: ArchConfig, x_prev, S0):
+    """Returns (y [B,S,d], (last_x [B,1,d], S_final))."""
+    r_cfg, H, hs = _dims(cfg)
+    cdt = _dt(cfg.compute_dtype)
+    B, S, d = x.shape
+    xs = _shift(x, x_prev)
+    mu = p_tm["mu"].astype(jnp.float32)
+    mix = [x * mu[i] + xs * (1 - mu[i]) for i in range(5)]
+    xr, xk, xv, xg, xw = mix
+    r = jnp.dot(xr.astype(cdt), p_tm["wr"].astype(cdt)).reshape(B, S, H, hs)
+    k = jnp.dot(xk.astype(cdt), p_tm["wk"].astype(cdt)).reshape(B, S, H, hs)
+    v = jnp.dot(xv.astype(cdt), p_tm["wv"].astype(cdt)).reshape(B, S, H, hs)
+    g = jax.nn.silu(jnp.dot(xg.astype(cdt), p_tm["wg"].astype(cdt)))
+    lw = _decay(p_tm, xw, cdt).reshape(B, S, H, hs)
+    y, S_fin = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), lw, p_tm["u"], S0,
+                            r_cfg.chunk)
+    y = rmsnorm(y, p_tm["ln"]).reshape(B, S, d)
+    y = y.astype(cdt) * g
+    return jnp.dot(y, p_tm["wo"].astype(cdt)), (x[:, -1:, :], S_fin)
+
+
+def rwkv6_channel_mix(p_cm, x, cfg: ArchConfig, x_prev):
+    cdt = _dt(cfg.compute_dtype)
+    xs = _shift(x, x_prev)
+    mu = p_cm["mu"].astype(jnp.float32)
+    xk = x * mu[0] + xs * (1 - mu[0])
+    xr = x * mu[1] + xs * (1 - mu[1])
+    k = jnp.square(jax.nn.relu(jnp.dot(xk.astype(cdt), p_cm["wk"].astype(cdt))))
+    kv = jnp.dot(k, p_cm["wv"].astype(cdt))
+    return jax.nn.sigmoid(jnp.dot(xr.astype(cdt), p_cm["wr"].astype(cdt))) * kv, \
+        x[:, -1:, :]
+
+
+def rwkv6_state_init(cfg: ArchConfig, batch: int) -> dict:
+    r, H, hs = _dims(cfg)
+    d = cfg.d_model
+    return {"tm_x": jnp.zeros((batch, 1, d), jnp.float32),
+            "cm_x": jnp.zeros((batch, 1, d), jnp.float32),
+            "S": jnp.zeros((batch, H, hs, hs), jnp.float32)}
+
+
+def rwkv6_block(p, x, cfg: ArchConfig, state):
+    """One layer (time-mix + channel-mix) over a full segment.
+
+    Note: the layer states hold the PRE-norm last-token activations, so
+    the token-shift sees the same stream in chunked and decode modes.
+    """
+    from repro.models.layers import apply_norm
+    h = apply_norm(p["ln1"], x, "layernorm").astype(jnp.float32)
+    y, (tm_x, S_fin) = rwkv6_time_mix(p["tm"], h, cfg, state["tm_x"], state["S"])
+    x = x + y.astype(x.dtype)
+    h = apply_norm(p["ln2"], x, "layernorm").astype(jnp.float32)
+    y2, cm_x = rwkv6_channel_mix(p["cm"], h, cfg, state["cm_x"])
+    x = x + y2.astype(x.dtype)
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "S": S_fin}
+
+
+# ------------------------------------------------------------ LM wrapper
+
+
+def rwkv6_lm_init(key, cfg: ArchConfig) -> dict:
+    from repro.models.layers import init_embedding, init_norm
+    dtype = _dt(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: rwkv6_init(k, cfg, dtype))(
+        jax.random.split(ks[0], cfg.n_layers))
+    return {"embed": init_embedding(ks[1], cfg.vocab, cfg.d_model, dtype),
+            "ln0": init_norm(cfg.d_model, "layernorm", dtype),
+            "layers": layers,
+            "final_norm": init_norm(cfg.d_model, "layernorm", dtype),
+            "unembed": init_embedding(ks[2], cfg.vocab, cfg.d_model, dtype)}
+
+
+def rwkv6_lm_states(cfg: ArchConfig, batch: int):
+    return jax.vmap(lambda _: rwkv6_state_init(cfg, batch))(
+        jnp.arange(cfg.n_layers))
+
+
+def rwkv6_lm_apply(params, tokens, cfg: ArchConfig, states=None,
+                   remat: str = "none"):
+    """tokens [B,S] -> (logits [B,S,V] f32, new stacked states)."""
+    from repro.models.layers import apply_norm, unembed
+    B, S = tokens.shape
+    cdt = _dt(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    x = apply_norm(params["ln0"], x, "layernorm")
+    if states is None:
+        states = rwkv6_lm_states(cfg, B)
+
+    def body(x, sl):
+        p_l, st_l = sl
+        x2, st2 = rwkv6_block(p_l, x, cfg, st_l)
+        return x2, st2
+
+    f = jax.checkpoint(body) if remat != "none" else body
+    x, new_states = jax.lax.scan(f, x, (params["layers"], states))
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    return unembed(x, params["unembed"], cdt), new_states

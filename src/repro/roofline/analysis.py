@@ -1,0 +1,231 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bandwidth
+  collective term = wire_bytes_per_device / (links * link_bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition SPMD
+module). Collective bytes are parsed out of the HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we record operand and result sizes and estimate per-device wire bytes with
+the standard ring formulas. Hardware model: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (3D-torus links usable per collective
+given as ``ICI_LINKS``).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (one direction)
+ICI_LINKS = 2                # usable links for a 1D ring collective on v5e
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+\[[^\]]*\][^ ]*?)\)?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\((.*)$")
+
+
+def _sizeof(type_str: str) -> int:
+    """'bf16[16,128]{1,0}' -> bytes; tuples sum their elements."""
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    operand_bytes: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_operand(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def to_dict(self):
+        return {"counts": self.counts, "operand_bytes": self.operand_bytes,
+                "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes,
+                "total_operand": self.total_operand,
+                "total_wire": self.total_wire}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_t, op, phase, operands = m.groups()
+        if phase == "-done":                 # avoid double count of async pairs
+            continue
+        res = _sizeof(result_t)
+        # operand types: everything inside the call parens that looks typed
+        opnd = _sizeof(operands.split(") ")[0] if ") " in operands else operands)
+        st.counts[op] = st.counts.get(op, 0) + 1
+        st.operand_bytes[op] = st.operand_bytes.get(op, 0) + opnd
+        st.result_bytes[op] = st.result_bytes.get(op, 0) + res
+        # per-device wire-byte estimate (ring algorithms, (n-1)/n ~ 1)
+        if op == "all-gather":
+            wire = max(res - opnd, 0)
+        elif op == "all-reduce":
+            wire = 2 * opnd
+        elif op == "reduce-scatter":
+            wire = max(opnd - res, 0)
+        elif op == "all-to-all":
+            wire = opnd
+        else:                                # collective-permute
+            wire = opnd
+        st.wire_bytes[op] = st.wire_bytes.get(op, 0) + wire
+    return st
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # per device
+    hlo_gbytes: float            # per device (CPU-fusion upper bound)
+    floor_gbytes: float          # per device analytic lower bound
+    wire_gbytes: float           # per device
+    model_gflops_total: float    # 6*N*D (or 6*N_active*D), whole step
+    compute_s: float = 0.0
+    memory_s: float = 0.0        # from hlo_gbytes (upper bound)
+    memory_floor_s: float = 0.0  # from floor_gbytes (lower bound)
+    collective_s: float = 0.0
+    bottleneck: str = ""         # using the floor memory term
+    bottleneck_ub: str = ""      # using the HLO-bytes upper bound
+    useful_flops_ratio: float = 0.0
+    step_s: float = 0.0
+    mfu: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.hlo_gflops * 1e9 / PEAK_FLOPS
+        self.memory_s = self.hlo_gbytes * 1e9 / HBM_BW
+        self.memory_floor_s = self.floor_gbytes * 1e9 / HBM_BW
+        self.collective_s = self.wire_gbytes * 1e9 / (ICI_LINKS * LINK_BW)
+        lo = {"compute": self.compute_s, "memory": self.memory_floor_s,
+              "collective": self.collective_s}
+        ub = {"compute": self.compute_s, "memory": self.memory_s,
+              "collective": self.collective_s}
+        self.bottleneck = max(lo, key=lo.get)
+        self.bottleneck_ub = max(ub, key=ub.get)
+        per_dev_model = self.model_gflops_total / self.chips
+        self.useful_flops_ratio = (per_dev_model / self.hlo_gflops
+                                   if self.hlo_gflops else 0.0)
+        # roofline step time = max of the three overlappable terms
+        self.step_s = max(lo.values())
+        ideal = per_dev_model * 1e9 / PEAK_FLOPS
+        self.mfu = ideal / self.step_s if self.step_s else 0.0
+        return self
+
+    def to_dict(self):
+        return dict(self.__dict__)
+
+
+def summarize(arch: str, shape: str, mesh: str, chips: int,
+              cost: dict, coll: CollectiveStats,
+              model_flops_total: float,
+              floor_bytes: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        floor_gbytes=floor_bytes / 1e9,
+        wire_gbytes=coll.total_wire / 1e9,
+        model_gflops_total=model_flops_total / 1e9,
+    ).finalize()
+
+
+def memory_floor_bytes(cfg, shape, chips: int, mesh_devices: int,
+                       opt_bytes_per_param: int = 8) -> float:
+    """Analytic per-device HBM-traffic lower bound.
+
+    train:   params read (fwd+bwd) + grads written + opt state r/w
+             + one activations pass at remat boundaries
+    prefill: params read + KV cache written + activations pass
+    decode:  params read + full cache read + small writes
+    """
+    P = cfg.param_count()
+    bpp = 2 if cfg.param_dtype == "bfloat16" else 4
+    p_local = P * bpp / chips
+    d = cfg.d_model
+    tok_local = shape.tokens / chips
+    act = tok_local * d * 2 * max(cfg.n_layers, 1)          # one r/w per layer
+    if shape.kind == "train":
+        return 3 * p_local + P * 4 / chips \
+            + P * opt_bytes_per_param / chips + 2 * act
+    kv_heads = max(cfg.kv_heads, 1)
+    hd = cfg.resolved_head_dim or d
+    if cfg.attention == "mla" and cfg.mla:
+        kv_elem = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+    elif cfg.attention == "gqa":
+        kv_elem = 2 * kv_heads * hd
+    else:
+        kv_elem = 0
+    n_kv_layers = cfg.n_layers
+    if cfg.hybrid is not None:
+        n_kv_layers = cfg.n_layers // cfg.hybrid.shared_attn_every
+    cache = (shape.global_batch * shape.seq_len * kv_elem * n_kv_layers
+             * bpp / chips)
+    if shape.kind == "prefill":
+        return p_local + cache + 2 * act
+    # decode: read whole cache once + params once
+    state = 0.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.expand * d
+        state += (shape.global_batch * (d_in // s.head_dim) * s.head_dim
+                  * s.d_state * 4 * cfg.n_layers / chips)
+    if cfg.rwkv is not None:
+        H = d // cfg.rwkv.head_size
+        state += (shape.global_batch * H * cfg.rwkv.head_size ** 2
+                  * 4 * cfg.n_layers / chips)
+    return p_local + cache + state
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for a train step (3x fwd), 2*N*D for prefill,
+    2*N*D per generated token for decode."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per seq

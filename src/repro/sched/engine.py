@@ -1,0 +1,287 @@
+"""Serving engine with device-pool core specialization (DESIGN.md §2.2).
+
+The paper's mechanism, transplanted: prefill (MXU-saturating ≈ AVX task)
+is confined to a **prefill pool**; decode (memory-bound, latency-critical
+≈ scalar task) owns the rest. The asymmetric rule carries over exactly:
+
+  * the decode pool NEVER runs prefill (one interleaved prefill stalls
+    every co-located decode — the 2 ms-tail analogue);
+  * the prefill pool MAY run decode batches when idle (work conservation,
+    paper §2.1/Fig. 3);
+  * requests are deadline-scheduled (EDF within each queue, the MuQSS
+    ordering) and migrate pools after prefill via a KV-cache handoff whose
+    cost is charged explicitly (the 400-500 ns migration analogue).
+
+Two operating modes:
+  * ``PoolModel`` — service times derived from roofline terms of a
+    dry-run cell (used by benchmarks; deterministic);
+  * real-model mode via ``launch/serve.py`` (small model on CPU, same
+    scheduler code).
+
+The no-specialization baseline is the same engine with one shared pool
+interleaving prefill chunks between decode iterations — vLLM-style
+continuous batching without disaggregation.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.runqueue import DeadlineQueue
+from repro.core.task import Task, TaskType
+
+
+@dataclass
+class Request:
+    rid: int
+    arrive_ms: float
+    prompt_len: int
+    max_new: int
+    # progress
+    prefilled: int = 0
+    generated: int = 0
+    # metrics
+    ttft_ms: Optional[float] = None
+    itl_ms: List[float] = field(default_factory=list)
+    done_ms: Optional[float] = None
+    last_token_ms: Optional[float] = None
+    deadline: float = 0.0
+    tid: int = 0
+
+    @property
+    def decoding(self) -> bool:
+        return self.prefilled >= self.prompt_len and \
+            self.generated < self.max_new
+
+
+@dataclass
+class PoolModel:
+    """Service-time model per device group, derived from roofline terms.
+
+    prefill: compute-bound -> ms per token per device
+    decode:  memory-bound  -> ms per iteration (cache+params read) with a
+             per-sequence increment.
+    """
+    prefill_ms_per_ktok: float = 16.0      # per device
+    decode_fixed_ms: float = 4.0           # params read / iteration
+    decode_ms_per_seq: float = 0.08        # cache read per active seq
+    handoff_ms: float = 2.0                # KV migration between pools
+
+    def prefill_ms(self, tokens: int, n_dev: int) -> float:
+        return self.prefill_ms_per_ktok * tokens / 1000.0 / max(n_dev, 1)
+
+    def decode_ms(self, batch: int, n_dev: int) -> float:
+        return self.decode_fixed_ms / max(n_dev, 1) \
+            + self.decode_ms_per_seq * batch / max(n_dev, 1)
+
+
+@dataclass
+class ServeConfig:
+    n_devices: int = 8
+    prefill_devices: int = 2
+    specialization: bool = True
+    prefill_chunk: int = 2048
+    decode_batch_max: int = 256
+    deadline_window_ms: float = 50.0
+
+
+@dataclass
+class ServeMetrics:
+    ttft_ms: List[float] = field(default_factory=list)
+    itl_ms: List[float] = field(default_factory=list)
+    completed: int = 0
+    total_ms: float = 0.0
+    prefill_busy_ms: float = 0.0
+    decode_busy_ms: float = 0.0
+    steals: int = 0
+    handoffs: int = 0
+
+    def p(self, xs, q):
+        if not xs:
+            return 0.0
+        s = sorted(xs)
+        return s[min(int(q * len(s)), len(s) - 1)]
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "throughput_tok_s": 1000.0 * sum(1 for _ in self.itl_ms)
+            / self.total_ms if self.total_ms else 0.0,
+            "ttft_p50_ms": self.p(self.ttft_ms, 0.5),
+            "ttft_p99_ms": self.p(self.ttft_ms, 0.99),
+            "itl_p50_ms": self.p(self.itl_ms, 0.5),
+            "itl_p99_ms": self.p(self.itl_ms, 0.99),
+            "completed": self.completed,
+            "steals": self.steals,
+            "handoffs": self.handoffs,
+        }
+
+
+class Engine:
+    """Discrete-time two-pool engine."""
+
+    def __init__(self, cfg: ServeConfig, model: PoolModel):
+        self.cfg = cfg
+        self.model = model
+
+    def run(self, requests: List[Request], horizon_ms: float) -> ServeMetrics:
+        cfg, model = self.cfg, self.model
+        m = ServeMetrics()
+        if cfg.specialization:
+            pools = [("prefill", cfg.prefill_devices),
+                     ("decode", cfg.n_devices - cfg.prefill_devices)]
+        else:
+            pools = [("shared", cfg.n_devices)]
+        free_at = [0.0 for _ in pools]
+        waiting: List[Request] = []        # needs prefill (EDF by arrival)
+        active: List[List[Request]] = [[] for _ in pools]  # decoding per pool
+        pending = sorted(requests, key=lambda r: r.arrive_ms)
+        pi = 0
+        t = 0.0
+        # round-robin over pools by next-free time
+        while t < horizon_ms:
+            p = int(np.argmin(free_at))
+            t = max(free_at[p], t if any(
+                a for a in active) or waiting else (
+                pending[pi].arrive_ms if pi < len(pending) else horizon_ms))
+            if t >= horizon_ms:
+                break
+            while pi < len(pending) and pending[pi].arrive_ms <= t:
+                waiting.append(pending[pi])
+                pi += 1
+            waiting.sort(key=lambda r: r.arrive_ms)
+            name, ndev = pools[p]
+            did = self._pool_step(p, name, ndev, t, waiting, active,
+                                  free_at, m)
+            if not did:
+                # idle: advance to next arrival or other pool event
+                nxt = [f for f in free_at if f > t]
+                cand = [pending[pi].arrive_ms] if pi < len(pending) else []
+                free_at[p] = min(nxt + cand + [horizon_ms])
+        m.total_ms = t
+        return m
+
+    # ------------------------------------------------------------ steps
+
+    def _pool_step(self, p: int, name: str, ndev: int, t: float,
+                   waiting: List[Request], active: List[List[Request]],
+                   free_at: List[float], m: ServeMetrics) -> bool:
+        cfg, model = self.cfg, self.model
+        if name == "prefill":
+            if waiting:
+                # AVX work arrived: scalar tasks leave the AVX core (the
+                # paper's IPI preemption) — migrate local decodes away
+                if active[p]:
+                    for r in active[p]:
+                        m.handoffs += 1
+                    active[1].extend(active[p])
+                    active[p] = []
+                # decode-pool overload keeps the request local (asymmetric
+                # stealing); otherwise hand off after prefill
+                overloaded = len(active[1]) >= cfg.decode_batch_max
+                return self._do_prefill(p, ndev, t, waiting, active,
+                                        free_at, m,
+                                        target_pool=p if overloaded else 1)
+            # idle prefill pool runs decode batches (scalar on AVX core)
+            if active[p]:
+                m.steals += 1
+                return self._do_decode(p, ndev, t, active, free_at, m)
+            return False
+        if name == "decode":
+            # NEVER runs prefill (the paper's invariant)
+            if active[p]:
+                return self._do_decode(p, ndev, t, active, free_at, m)
+            return False
+        # shared pool (no specialization): interleave chunked prefill
+        # between decode iterations — every prefill stalls all decodes
+        if waiting:
+            return self._do_prefill(p, ndev, t, waiting, active, free_at,
+                                    m, target_pool=p)
+        if active[p]:
+            return self._do_decode(p, ndev, t, active, free_at, m)
+        return False
+
+    def _do_prefill(self, p: int, ndev: int, t: float,
+                    waiting: List[Request], active, free_at,
+                    m: ServeMetrics, target_pool: int) -> bool:
+        cfg, model = self.cfg, self.model
+        r = waiting[0]
+        chunk = min(cfg.prefill_chunk, r.prompt_len - r.prefilled)
+        dur = model.prefill_ms(chunk, ndev)
+        r.prefilled += chunk
+        end = t + dur
+        m.prefill_busy_ms += dur
+        if r.prefilled >= r.prompt_len:
+            waiting.pop(0)
+            r.ttft_ms = end - r.arrive_ms
+            m.ttft_ms.append(r.ttft_ms)
+            r.last_token_ms = end
+            r.generated = 1          # prefill emits the first token
+            if cfg.specialization and target_pool != p:
+                end += model.handoff_ms
+                m.handoffs += 1
+            active[target_pool].append(r)
+        free_at[p] = end
+        return True
+
+    def _do_decode(self, p: int, ndev: int, t: float, active, free_at,
+                   m: ServeMetrics) -> bool:
+        cfg, model = self.cfg, self.model
+        batch = active[p][:cfg.decode_batch_max]
+        dur = model.decode_ms(len(batch), ndev)
+        end = t + dur
+        m.decode_busy_ms += dur
+        still = []
+        for r in batch:
+            r.generated += 1
+            if r.last_token_ms is not None:
+                m.itl_ms.append(end - r.last_token_ms)
+            r.last_token_ms = end
+            if r.generated >= r.max_new:
+                r.done_ms = end
+                m.completed += 1
+            else:
+                still.append(r)
+        active[p] = still + active[p][cfg.decode_batch_max:]
+        free_at[p] = end
+        return True
+
+
+def poisson_workload(rate_per_s: float, duration_ms: float, *,
+                     prompt_len=4096, max_new=128, seed=0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    out, t, rid = [], 0.0, 0
+    while t < duration_ms:
+        t += rng.exponential(1000.0 / rate_per_s)
+        pl_ = int(prompt_len * rng.uniform(0.5, 1.5))
+        out.append(Request(rid=rid, arrive_ms=t, prompt_len=pl_,
+                           max_new=max_new))
+        rid += 1
+    return out
+
+
+def pool_model_from_dryrun(results: dict, arch: str,
+                           mesh: str = "single") -> PoolModel:
+    """Derive per-chip service times from the dry-run roofline terms.
+
+    step_s is the per-device roofline time on `chips` devices, so one
+    chip-second per unit of work is step_s * chips; the engine divides by
+    its own pool size."""
+    pre = results.get(f"{arch}|prefill_32k|{mesh}")
+    dec = results.get(f"{arch}|decode_32k|{mesh}")
+    if not (pre and dec and pre["status"] == dec["status"] == "ok"):
+        return PoolModel()
+    rp, rd = pre["roofline"], dec["roofline"]
+    chips = rp.get("chips", 256)
+    shape_tokens = 32 * 32768
+    prefill_chip_s_per_tok = rp["step_s"] * chips / shape_tokens
+    decode_chip_s_per_iter = rd["step_s"] * rd.get("chips", 256)
+    return PoolModel(
+        prefill_ms_per_ktok=max(prefill_chip_s_per_tok * 1e6, 1e-3),
+        decode_fixed_ms=max(decode_chip_s_per_iter * 1e3 * 0.2, 1e-3),
+        decode_ms_per_seq=max(decode_chip_s_per_iter * 1e3 * 0.8 / 128.0,
+                              1e-4),
+    )

@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: atomic writes, async save, keep-N GC,
+full-state restore (params, optimizer, data cursor, RNG), and elastic
+restore onto a different mesh.
+
+Layout: <dir>/step_<N>/   arrays.npz   (flat {path: np.ndarray})
+                          meta.json    (step, data cursor, rng, config)
+        <dir>/step_<N>.tmp.*          (staging; renamed atomically)
+
+Host arrays are mesh-agnostic, so restoring onto a different device count
+is just re-sharding at jit boundaries — ``elastic.py`` wraps that.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(tree, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, state, meta: Optional[Dict[str, Any]] = None):
+        """Atomic (tmp + rename) snapshot; async by default."""
+        self.wait()                    # one in-flight save at a time
+        # materialize on host synchronously (cheap vs serialization)
+        flat = _flatten(jax.device_get(state))
+        meta = dict(meta or {})
+        meta["step"] = step
+        meta["time"] = time.time()
+
+        def _write():
+            try:
+                tmp = self.dir / f"step_{step}.tmp.{os.getpid()}"
+                tmp.mkdir(parents=True, exist_ok=True)
+                np.savez(tmp / "arrays.npz", **flat)
+                (tmp / "meta.json").write_text(json.dumps(meta))
+                final = self.dir / f"step_{step}"
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            self._raise_if_failed()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+        # stale tmp dirs from crashed saves
+        for p in self.dir.glob("step_*.tmp.*"):
+            shutil.rmtree(p, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and ".tmp." not in p.name:
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like_state, step: Optional[int] = None
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``like_state`` (abstract or
+        concrete). Returns (state, meta)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        with np.load(d / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        meta = json.loads((d / "meta.json").read_text())
+        return _unflatten_like(like_state, flat), meta

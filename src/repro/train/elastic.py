@@ -1,0 +1,72 @@
+"""Elastic scaling + failure handling.
+
+* ``elastic_restore`` — resume a checkpoint onto a different mesh shape:
+  checkpoints hold host arrays (mesh-agnostic), the data pipeline cursor
+  is global (re-partitions across any host count), so rescale = rebuild
+  shardings and continue.
+* ``Watchdog`` — straggler/failure detection for the training loop:
+  per-step deadline; on trip, the runner checkpoints and (in a real
+  deployment) excludes the slow replica and re-enters with a smaller dp
+  axis — here the excluded-replica path is simulated by rescaling.
+* ``install_preemption_handler`` — SIGTERM -> synchronous final
+  checkpoint (preemptible-VM style clean exit).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.dist.context import DistContext, make_dist
+from repro.dist.sharding import tree_shardings
+from repro.train.checkpoint import CheckpointManager
+
+
+def elastic_restore(ckpt: CheckpointManager, abstract_state,
+                    new_dist: DistContext, state_specs):
+    """Restore the latest checkpoint and place it for ``new_dist``'s mesh
+    (any device count whose axes divide the tensor dims)."""
+    host_state, meta = ckpt.restore(abstract_state)
+    if not new_dist.active:
+        return jax.tree_util.tree_map(jax.numpy.asarray, host_state), meta
+    sh = tree_shardings(new_dist, abstract_state, state_specs)
+    placed = jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, s), host_state, sh)
+    return placed, meta
+
+
+class Watchdog:
+    """Per-step deadline; trips when a step exceeds `factor` x the rolling
+    median (straggler) or `hard_s` (hang)."""
+
+    def __init__(self, factor: float = 3.0, hard_s: float = 600.0,
+                 warmup: int = 3):
+        self.factor = factor
+        self.hard_s = hard_s
+        self.warmup = warmup
+        self.history = []
+
+    def observe(self, step_s: float) -> Optional[str]:
+        self.history.append(step_s)
+        if step_s > self.hard_s:
+            return "hang"
+        if len(self.history) > self.warmup:
+            med = sorted(self.history[:-1])[len(self.history[:-1]) // 2]
+            if step_s > self.factor * med:
+                return "straggler"
+        return None
+
+
+def install_preemption_handler(on_preempt: Callable[[], None]):
+    """SIGTERM -> checkpoint-and-exit (returns the previous handler)."""
+    prev = signal.getsignal(signal.SIGTERM)
+
+    def handler(signum, frame):
+        on_preempt()
+        if callable(prev):
+            prev(signum, frame)
+
+    signal.signal(signal.SIGTERM, handler)
+    return prev

@@ -1,0 +1,147 @@
+"""Training step construction: microbatched grad accumulation, sharded
+train state, metrics. The returned step is what the dry-run lowers for
+``train_4k`` and what ``launch/train.py`` runs for real.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.context import DistContext, no_dist
+from repro.dist.sharding import sanitize_specs, tree_shardings
+from repro.models.api import Model
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def opt_state_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def _contains_dp(entry, dp_axes) -> bool:
+    if entry is None:
+        return False
+    if isinstance(entry, (tuple, list)):
+        return any(e in dp_axes for e in entry)
+    return entry in dp_axes
+
+
+def _pure_dp(entry, dp_axes) -> bool:
+    """True only for FSDP entries (every axis is a dp axis) — mixed
+    EP/TP entries like ('data','model') must keep their sharding."""
+    if entry is None:
+        return False
+    if isinstance(entry, (tuple, list)):
+        return len(entry) > 0 and all(e in dp_axes for e in entry)
+    return entry in dp_axes
+
+
+def train_state_specs(model: Model):
+    """Params + optimizer sharding. With dist.zero1 the dp (FSDP) axes
+    are STRIPPED from parameter specs (params replicated over dp, still
+    TP/EP-sharded over model) while the optimizer state additionally
+    shards its largest unsharded dim over dp (ZeRO-1): gradient sync is
+    one all-reduce, the update runs on optimizer shards, and SPMD inserts
+    one param all-gather per step — no per-layer weight gathers."""
+    dist = model.dist
+    ps = model.param_specs()
+    if not (dist.active and dist.zero1):
+        return {"params": ps, "opt": opt_state_specs(ps)}
+    dp = dist.dp_axes
+    abstract = model.abstract_params()
+
+    def strip_dp(spec: P) -> P:
+        return P(*[None if _pure_dp(e, dp) else e for e in spec])
+
+    def add_dp(a, spec: P) -> P:
+        entries = list(spec) + [None] * (a.ndim - len(spec))
+        if a.ndim == 0 or a.size < 1 << 16 \
+                or any(_contains_dp(e, dp) for e in entries):
+            return P(*entries)
+        free = [i for i, e in enumerate(entries) if e is None]
+        if not free:
+            return P(*entries)
+        big = max(free, key=lambda i: a.shape[i])
+        entries[big] = dp if len(dp) > 1 else dp[0]
+        return P(*entries)
+
+    is_p = lambda x: isinstance(x, P)
+    params_ps = jax.tree_util.tree_map(strip_dp, ps, is_leaf=is_p)
+    opt_ps = jax.tree_util.tree_map(add_dp, abstract, params_ps)
+    return {"params": params_ps, "opt": opt_state_specs(opt_ps)}
+
+
+def init_train_state(model: Model, key, opt_cfg: OptConfig):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(reshape, batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), metrics
+
+        (grads, loss_sum), metrics = jax.lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum / grad_accum, metrics, grads
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        params, opt, stats = adamw_update(state["params"], grads,
+                                          state["opt"], opt_cfg)
+        metrics = {**metrics, **stats, "loss": loss}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt_cfg: OptConfig, grad_accum: int = 1,
+                   batch_specs: Optional[Dict] = None, donate: bool = True):
+    """jit with explicit in/out shardings (requires an active mesh)."""
+    dist = model.dist
+    step = make_train_step(model, opt_cfg, grad_accum)
+    if not dist.active:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+    abstract_params = model.abstract_params()
+    sspec = train_state_specs(model)
+    abstract_state = {"params": abstract_params,
+                      "opt": jax.eval_shape(
+                          lambda p: init_opt_state(p, opt_cfg), abstract_params)}
+    state_sh = tree_shardings(dist, abstract_state, sspec)
+    batch_sh = jax.tree_util.tree_map(
+        lambda s: dist.sharding(s), batch_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    metrics_sh = None  # replicated scalars
+    return jax.jit(step,
+                   in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, metrics_sh),
+                   donate_argnums=(0,) if donate else ())

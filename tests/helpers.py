@@ -1,0 +1,22 @@
+"""Test helpers: run a snippet in a subprocess with N fake XLA devices
+(the main test process must keep seeing exactly one device)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout[-4000:]}\n"
+            f"STDERR:\n{out.stderr[-4000:]}")
+    return out.stdout

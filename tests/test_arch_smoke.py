@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (deliverable f): reduced config, one
+forward/loss/prefill/decode on CPU; shape + finiteness + decode-vs-
+forward consistency for every family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import arch_ids, get_arch
+from repro.dist.context import no_dist
+from repro.models.api import build_model
+
+ARCHS = arch_ids()
+
+
+def _batch(cfg, B, S, key):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+         "targets": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.enc_dec.n_frames, cfg.d_model)) * 0.1
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_and_shapes(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(0))
+    B, S = 2, 32
+    batch = _batch(cfg, B, S, jax.random.key(1))
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S + 1, jax.random.key(1))
+    toks = batch["tokens"]
+    cache = model.init_cache(params, batch, B, 32)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = toks[:, :S]
+    lg, cache = model.prefill(params, pre_batch, cache)
+    assert lg.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+    lg2, cache = model.decode_step(params, cache, toks[:, S:S + 1],
+                                   jnp.full((B,), S, jnp.int32))
+    assert lg2.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(lg2).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "grok-1-314b",
+                                  "deepseek-v3-671b", "zamba2-2.7b",
+                                  "rwkv6-3b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill(S) then decode(token S) must equal full forward at pos S."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab)
+    batch = {"tokens": toks[:, :S]}
+    cache = model.init_cache(params, batch, B, 32)
+    _, cache = model.prefill(params, batch, cache)
+    lg_dec, _ = model.decode_step(params, cache, toks[:, S:S + 1],
+                                  jnp.full((B,), S, jnp.int32))
+    # teacher-forced reference
+    from repro.models import transformer, rwkv6, hybrid
+    if cfg.family in ("dense", "moe", "vlm"):
+        ref, _ = transformer.lm_forward(params, toks, cfg)
+    elif cfg.family == "ssm":
+        ref, _ = rwkv6.rwkv6_lm_apply(params, toks, cfg)
+    else:
+        ref, _ = hybrid.hybrid_forward(params, toks, cfg)
+    err = float(jnp.abs(lg_dec - ref[:, S]).max())
+    assert err < 5e-4, err
+
+
+def test_grad_flows_everywhere():
+    """No dead parameters: every leaf gets a nonzero gradient signal
+    (catches disconnected modules)."""
+    cfg = get_arch("deepseek-v3-671b").reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, 2, 32, jax.random.key(1))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    dead = [jax.tree_util.keystr(path) for path, g in flat
+            if float(jnp.abs(g).max()) == 0.0]
+    # router/shared paths may be legitimately sparse in a tiny batch, but
+    # the bulk of parameters must receive gradient
+    assert len(dead) <= 2, dead
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    """Enc-dec: prefill-initialized cache + decode step must equal the
+    teacher-forced decoder logits at the same position."""
+    from repro.models import encdec
+    cfg = get_arch("whisper-large-v3").reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab)
+    frames = jax.random.normal(
+        jax.random.key(2), (B, cfg.enc_dec.n_frames, cfg.d_model)) * 0.1
+    batch = {"tokens": toks[:, :S], "frames": frames}
+    cache = model.init_cache(params, batch, B, 32)
+    # feed the prefix through decode steps (whisper cache fills stepwise)
+    lengths = jnp.zeros((B,), jnp.int32)
+    for t in range(S + 1):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      lengths)
+        lengths = lengths + 1
+    enc_out = encdec.encode(params, frames, cfg)
+    ref = encdec.decode_forward(params, toks, enc_out, cfg)
+    err = float(jnp.abs(lg - ref[:, S]).max())
+    assert err < 5e-4, err

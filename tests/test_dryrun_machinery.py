@@ -1,0 +1,55 @@
+"""Dry-run machinery: one real lower+compile on the 8-device test mesh
+per model family, plus the perf-variant override plumbing (subprocess so
+the main process keeps one device)."""
+import pytest
+
+from helpers import run_with_devices
+
+pytestmark = pytest.mark.slow
+
+
+def test_dryrun_cells_per_family():
+    out = run_with_devices("""
+from repro.launch import dryrun
+# one cheap representative per family x entry-point kind
+cells = [
+    ('qwen1.5-0.5b', 'train_4k'),      # dense train
+    ('rwkv6-3b', 'decode_32k'),        # ssm decode
+    ('zamba2-2.7b', 'long_500k'),      # hybrid long-context decode
+    ('whisper-large-v3', 'prefill_32k')]  # enc-dec prefill
+for arch, shape in cells:
+    res = dryrun.run_cell(arch, shape, 'test')
+    assert res['status'] == 'ok', (arch, shape, res.get('error'),
+                                   res.get('trace', '')[-800:])
+    r = res['roofline']
+    assert r['hlo_gflops'] > 0
+    assert r['bottleneck'] in ('compute', 'memory', 'collective')
+print('PASS')
+""", n_devices=8, timeout=1800)
+    assert "PASS" in out
+
+
+def test_perf_overrides_change_the_program():
+    out = run_with_devices("""
+from repro.launch import dryrun
+base = dryrun.run_cell('qwen1.5-0.5b', 'decode_32k', 'test')
+opt = dryrun.run_cell('qwen1.5-0.5b', 'decode_32k', 'test',
+                      overrides={'fsdp': False})
+assert base['status'] == opt['status'] == 'ok'
+w0 = base['collectives']['total_wire']
+w1 = opt['collectives']['total_wire']
+assert w1 < w0, (w0, w1)   # replicated serving weights cut wire bytes
+print('PASS', w0, '->', w1)
+""", n_devices=8, timeout=1200)
+    assert "PASS" in out
+
+
+def test_zero1_override_lowers():
+    out = run_with_devices("""
+from repro.launch import dryrun
+res = dryrun.run_cell('rwkv6-3b', 'train_4k', 'test',
+                      overrides={'zero1': True, 'fsdp': False})
+assert res['status'] == 'ok', res.get('error')
+print('PASS')
+""", n_devices=8, timeout=1200)
+    assert "PASS" in out

@@ -1,0 +1,85 @@
+"""License state machine semantics (paper Fig. 1 / §2)."""
+import pytest
+
+from repro.core.license import CoreLicense, LicenseConfig
+from repro.core.task import IClass
+
+CFG = LicenseConfig(grant_delay_us=500.0, hysteresis_us=2000.0,
+                    detect_delay_us=0.0, throttle_factor=1.0)
+
+
+def test_grant_delay_then_reduced_frequency():
+    lic = CoreLicense(CFG)
+    assert lic.speed_ghz(0.0) == 2.8
+    # dense AVX-512 work: request pending -> runs at target during window
+    t_end = lic.execute(0.0, 1.9e3 * 100, IClass.AVX512, dense=True)
+    # 100 µs of work at 1.9 GHz (request window) -> exactly 100 µs
+    assert t_end == pytest.approx(100.0, rel=1e-6)
+    assert lic.pending == 2 and lic.level == 0
+    # after the grant window the license is L2
+    assert lic.speed_ghz(600.0) == 1.9
+    assert lic.level == 2
+
+
+def test_hysteresis_reverts_after_2ms():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 1.9e3 * 600, IClass.AVX512, dense=True)  # past grant
+    assert lic.level == 2
+    # scalar code immediately after still runs at 1.9 (the paper's problem)
+    t0 = lic.execute(600.0, 1.9e3 * 100, IClass.SCALAR, dense=True)
+    assert lic.speed_ghz(t0) == 1.9
+    # 2 ms after the last heavy section the frequency reverts
+    assert lic.speed_ghz(600.0 + 2000.0 + 1.0) == 2.8
+    assert lic.level == 0
+
+
+def test_scalar_code_spans_the_revert_boundary():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 1.9e3 * 600, IClass.AVX512, dense=True)
+    # 4 ms of scalar work starting at t=600: first 2 ms at 1.9, rest at 2.8
+    cycles = 1.9e3 * 2000 + 2.8e3 * 2000
+    t_end = lic.execute(600.0, cycles, IClass.SCALAR, dense=True)
+    assert t_end == pytest.approx(600.0 + 4000.0, rel=1e-4)
+
+
+def test_sparse_sections_do_not_change_frequency():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 1000.0, IClass.AVX512, dense=False)
+    assert lic.pending is None and lic.level == 0
+    assert lic.speed_ghz(10.0) == 2.8
+
+
+def test_throttle_counter_counts_request_window_only():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 2.8e3 * 50, IClass.SCALAR, dense=True)
+    assert lic.throttle_cycles == 0
+    lic.execute(50.0, 1.9e3 * 1000, IClass.AVX512, dense=True)
+    # request window is 500 µs at 1.9e3 cycles/µs
+    assert lic.throttle_cycles == pytest.approx(1.9e3 * 500, rel=1e-3)
+
+
+def test_avx2_targets_level1():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 2.4e3 * 600, IClass.AVX2, dense=True)
+    assert lic.level == 1
+    assert lic.speed_ghz(600.0) == 2.4
+
+
+def test_refresh_keeps_low_level():
+    lic = CoreLicense(CFG)
+    lic.execute(0.0, 1.9e3 * 600, IClass.AVX512, dense=True)
+    t = 600.0
+    # heavy bursts every 1 ms keep the license at L2 indefinitely
+    for _ in range(5):
+        t = lic.execute(t, 1.9e3 * 10, IClass.AVX512, dense=True)
+        t = lic.execute(t, 1.9e3 * 990, IClass.SCALAR, dense=True)
+    assert lic.level == 2
+
+
+def test_throttle_factor_slows_request_window():
+    cfg = LicenseConfig(grant_delay_us=500.0, detect_delay_us=0.0,
+                        throttle_factor=0.5)
+    lic = CoreLicense(cfg)
+    # during the request window speed is 1.9 * 0.5
+    t_end = lic.execute(0.0, 1.9e3 * 0.5 * 100, IClass.AVX512, dense=True)
+    assert t_end == pytest.approx(100.0, rel=1e-6)

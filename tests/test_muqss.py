@@ -1,0 +1,136 @@
+"""Scheduler invariants (§3.1-3.2), including hypothesis property tests:
+
+  INV1  a scalar core never runs an AVX task;
+  INV2  an AVX core may run scalar tasks only when no AVX/untyped task is
+        eligible with a better deadline;
+  INV3  untyped tasks are never starved by AVX tasks on AVX cores beyond
+        deadline order (they share the no-penalty class);
+  INV4  every runnable task is eventually picked (work conservation).
+"""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.muqss import SchedConfig, Scheduler
+from repro.core.task import Segment, Task, TaskType
+
+
+def mk_task(ttype):
+    return Task(iter(()), ttype=ttype)
+
+
+def drain(sched, core, now=0.0):
+    out = []
+    while True:
+        t = sched.pick_next(core, now)
+        if t is None:
+            return out
+        out.append(t)
+        sched.on_done(t, core)
+
+
+def test_scalar_core_never_picks_avx():
+    s = Scheduler(SchedConfig(n_cores=4, n_avx_cores=1))
+    for tt in (TaskType.AVX, TaskType.AVX, TaskType.SCALAR, TaskType.UNTYPED):
+        s.enqueue(mk_task(tt), 0.0)
+    picked = drain(s, 0)  # core 0 is scalar
+    assert all(t.ttype != TaskType.AVX for t in picked)
+    assert len(picked) == 2  # scalar + untyped
+
+
+def test_avx_core_prefers_avx_then_untyped_then_scalar():
+    s = Scheduler(SchedConfig(n_cores=4, n_avx_cores=1))
+    sc, av, un = mk_task(TaskType.SCALAR), mk_task(TaskType.AVX), \
+        mk_task(TaskType.UNTYPED)
+    # enqueue scalar first so it has the EARLIEST raw deadline
+    s.enqueue(sc, 0.0)
+    s.enqueue(av, 1.0)
+    s.enqueue(un, 2.0)
+    picked = drain(s, 3)  # core 3 is the AVX core
+    assert [t.ttype for t in picked] == [TaskType.AVX, TaskType.UNTYPED,
+                                         TaskType.SCALAR]
+
+
+def test_untyped_not_starved_on_avx_core():
+    """System tasks pinned to AVX cores share the unpenalized class."""
+    s = Scheduler(SchedConfig(n_cores=2, n_avx_cores=1))
+    un = mk_task(TaskType.UNTYPED)
+    s.enqueue(un, 0.0)
+    for i in range(5):
+        s.enqueue(mk_task(TaskType.AVX), 1.0 + i)
+    picked = drain(s, 1)
+    # the untyped task has the earliest deadline -> picked first
+    assert picked[0] is un
+
+
+def test_type_change_on_scalar_core_forces_requeue_and_ipi():
+    s = Scheduler(SchedConfig(n_cores=4, n_avx_cores=1))
+    t = mk_task(TaskType.SCALAR)
+    s.enqueue(t, 0.0)
+    got = s.pick_next(0, 0.0)
+    assert got is t
+    # an AVX core busy with a scalar task
+    filler = mk_task(TaskType.SCALAR)
+    s.enqueue(filler, 0.0)
+    got2 = s.pick_next(3, 0.0)
+    assert got2 is filler
+    requeue, preempt = s.on_type_change(t, TaskType.AVX, 1.0)
+    assert requeue is True
+    assert preempt == 3
+    assert s.should_preempt(3) is True
+    assert s.should_preempt(3) is False  # one-shot
+
+
+def test_no_specialization_mode_is_plain_muqss():
+    s = Scheduler(SchedConfig(n_cores=2, n_avx_cores=0, specialization=False))
+    a, b = mk_task(TaskType.AVX), mk_task(TaskType.SCALAR)
+    s.enqueue(a, 0.0)
+    s.enqueue(b, 1.0)
+    assert s.pick_next(0, 0.0) is a  # any core runs anything, EDF order
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.sampled_from([TaskType.SCALAR, TaskType.AVX,
+                                 TaskType.UNTYPED]),
+                min_size=1, max_size=40),
+       st.integers(min_value=2, max_value=8),
+       st.integers(min_value=1, max_value=3))
+def test_property_specialization_invariants(types, n_cores, n_avx):
+    n_avx = min(n_avx, n_cores - 1)
+    s = Scheduler(SchedConfig(n_cores=n_cores, n_avx_cores=n_avx))
+    tasks = [mk_task(tt) for tt in types]
+    for i, t in enumerate(tasks):
+        s.enqueue(t, float(i))
+    picked_by_core = {c: drain(s, c, now=100.0) for c in range(n_cores)}
+    seen = set()
+    for core, picked in picked_by_core.items():
+        for t in picked:
+            # INV1: scalar cores never run AVX tasks
+            if not s.is_avx_core(core):
+                assert t.ttype != TaskType.AVX
+            assert t.tid not in seen  # no double scheduling
+            seen.add(t.tid)
+    # INV4: everything eventually ran (scalar+untyped anywhere, AVX on AVX)
+    assert len(seen) == len(tasks)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from([TaskType.SCALAR, TaskType.AVX, TaskType.UNTYPED]),
+    st.floats(min_value=0, max_value=100)), min_size=2, max_size=30))
+def test_property_deadline_order_within_class(entries):
+    """Among tasks of the same class on the same queue set, pick order
+    follows deadlines (EDF)."""
+    s = Scheduler(SchedConfig(n_cores=3, n_avx_cores=1))
+    tasks = []
+    for tt, at in entries:
+        t = mk_task(tt)
+        s.enqueue(t, at)
+        tasks.append(t)
+    picked = drain(s, 2)  # AVX core sees all classes
+    per_class = {}
+    for t in picked:
+        per_class.setdefault(t.ttype, []).append(t.deadline)
+    for cls, deadlines in per_class.items():
+        assert deadlines == sorted(deadlines)

@@ -1,0 +1,63 @@
+"""Device-pool specialization for serving (the TPU adaptation, DESIGN.md
+§2.2): interference and its mitigation, asymmetric-rule invariants."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.sched.engine import (Engine, PoolModel, Request, ServeConfig,
+                                poisson_workload)
+
+PM = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
+               decode_ms_per_seq=24.0, handoff_ms=2.0)
+
+
+def _run(spec, wl, n_dev=16, pre_dev=4, horizon=60_000.0):
+    eng = Engine(ServeConfig(n_devices=n_dev, prefill_devices=pre_dev,
+                             specialization=spec), PM)
+    return eng.run(copy.deepcopy(wl), horizon)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return poisson_workload(3.2, 60_000, prompt_len=2048, max_new=64, seed=5)
+
+
+def test_specialization_cuts_itl_tail_spread(workload):
+    ns = _run(False, workload).summary()
+    sp = _run(True, workload).summary()
+    spread_ns = ns["itl_p99_ms"] - ns["itl_p50_ms"]
+    spread_sp = sp["itl_p99_ms"] - sp["itl_p50_ms"]
+    assert spread_sp < 0.5 * spread_ns, (ns, sp)
+
+
+def test_handoffs_happen_only_with_specialization(workload):
+    ns = _run(False, workload)
+    sp = _run(True, workload)
+    assert ns.steals == 0 and ns.handoffs == 0
+    assert sp.handoffs > 0
+
+
+def test_decode_pool_never_prefills(workload):
+    """With specialization the decode pool accumulates zero prefill time:
+    all prefill busy-ms happen before any decode-pool activity for each
+    request (TTFT >= pure prefill service time)."""
+    m = _run(True, workload)
+    min_prefill_ms = PM.prefill_ms(1024, 4)   # smallest possible prompt
+    assert min(m.ttft_ms) >= min_prefill_ms * 0.99
+
+
+def test_throughput_not_sacrificed(workload):
+    ns = _run(False, workload).summary()
+    sp = _run(True, workload).summary()
+    assert sp["throughput_tok_s"] >= 0.85 * ns["throughput_tok_s"]
+
+
+def test_overload_keeps_requests_on_prefill_pool():
+    """Asymmetric stealing: when the decode pool saturates but prefill has
+    idle gaps, freshly prefilled requests decode on the prefill pool."""
+    wl = poisson_workload(4.0, 20_000, prompt_len=512, max_new=512, seed=1)
+    eng = Engine(ServeConfig(n_devices=8, prefill_devices=2,
+                             specialization=True, decode_batch_max=16), PM)
+    m = eng.run(wl, 20_000)
+    assert m.steals > 0
