@@ -1,0 +1,49 @@
+"""Bandwidth-aware collectives. Both functions run *inside* a
+``shard_map`` body and operate on the local shard with named-axis
+collectives.
+
+* ``compressed_allreduce`` — int8-quantized gradient mean with error
+  feedback: each shard quantizes (value + carried residual) to int8 with
+  a per-shard fp32 scale, exchanges the int8 payload + scales, and
+  dequantizes locally. The residual returned must be fed back into the
+  next call so quantization error accumulates into later steps instead
+  of being lost (1-bit-Adam-style error feedback).
+
+* ``hierarchical_allreduce`` — multi-pod allreduce decomposed into
+  intra-pod reduce-scatter -> inter-pod allreduce (on 1/Nth of the
+  data) -> intra-pod all-gather, so the slow inter-pod links carry only
+  the scattered fraction of the tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_allreduce(x, err, axis_name):
+    """Int8 mean-allreduce of ``x`` over ``axis_name`` with error
+    feedback. Returns ``(mean, new_err)``: ``mean`` approximates the
+    cross-shard mean of ``x`` (same value on every shard), ``new_err``
+    is this shard's quantization residual for the next call."""
+    v = x.astype(jnp.float32) + err.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = v - deq
+
+    n = jax.lax.psum(1, axis_name)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)  # one fp32 per shard
+    mean = jnp.einsum("n,n...->...", scales, qs.astype(jnp.float32)) / n
+    return mean.astype(x.dtype), new_err.astype(err.dtype)
+
+
+def hierarchical_allreduce(x, pod_axis, local_axis, *, scatter_dim=0):
+    """Sum-allreduce of ``x`` over ``pod_axis`` x ``local_axis`` using
+    the pod hierarchy. ``x.shape[scatter_dim]`` must be divisible by the
+    ``local_axis`` size (the intra-pod reduce-scatter shard)."""
+    part = jax.lax.psum_scatter(x, local_axis,
+                                scatter_dimension=scatter_dim, tiled=True)
+    part = jax.lax.psum(part, pod_axis)
+    return jax.lax.all_gather(part, local_axis, axis=scatter_dim, tiled=True)

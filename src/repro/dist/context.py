@@ -1,0 +1,109 @@
+"""Distributed context: which mesh axes play which role, plus the
+sharding knobs every layer threads through (``fsdp``, ``zero1``,
+``seq_parallel``, ``ep_over_dp``).
+
+Axis conventions (see ``launch/mesh.py``): the tensor/expert-parallel
+axis is named ``model``; every other axis (``data``, and ``pod`` on
+multi-pod meshes) is data-parallel. A mesh without a ``model`` axis is
+pure data parallelism — models then run their single-device code path
+under ``jit`` with batch-sharding constraints only.
+
+``DistContext`` is a frozen dataclass so it can be closed over freely by
+jitted functions and used as a static argument.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import sanitize_spec
+
+#: mesh axes that are never data-parallel: ``model`` carries TP/EP,
+#: ``stage`` carries pipeline stages (see ``pipeline.gpipe_apply``).
+_NON_DP_AXES = ("model", "stage")
+
+
+@dataclass(frozen=True)
+class DistContext:
+    active: bool
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    ep_axes: Tuple[str, ...] = ()
+    ep_over_dp: bool = False
+    fsdp: bool = False
+    zero1: bool = False
+    seq_parallel: bool = False
+
+    # ------------------------------------------------------- axis sizes
+
+    def _size(self, axes: Tuple[str, ...]) -> int:
+        if not self.active or self.mesh is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in axes) if axes else 1
+
+    @property
+    def dp_size(self) -> int:
+        return self._size(self.dp_axes)
+
+    @property
+    def model_size(self) -> int:
+        return self._size((self.model_axis,) if self.model_axis else ())
+
+    @property
+    def ep_size(self) -> int:
+        return self._size(self.ep_axes)
+
+    # -------------------------------------------------------- placement
+
+    def sharding(self, spec: Optional[P]) -> Optional[NamedSharding]:
+        """PartitionSpec -> NamedSharding on this context's mesh."""
+        if not self.active or spec is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: Optional[P]):
+        """``with_sharding_constraint`` against this mesh, sanitized to
+        ``x``'s (static) shape: axes missing from the mesh or not
+        dividing the dimension are dropped rather than erroring, so the
+        same model code runs on any mesh shape. Identity when inactive."""
+        if not self.active or spec is None:
+            return x
+        spec = sanitize_spec(spec, x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def make_dist(mesh: Mesh, *, fsdp: bool = True, zero1: bool = False,
+              seq_parallel: bool = False,
+              ep_over_dp: bool = False) -> DistContext:
+    """Build a :class:`DistContext` from a mesh.
+
+    * ``fsdp``        — shard big parameter dims over the dp axes
+                        (gathered on use inside shard_map bodies).
+    * ``zero1``       — replicate params over dp but shard optimizer
+                        state (see ``train.loop.train_state_specs``).
+    * ``seq_parallel``— activations additionally shard their sequence
+                        dim over the model axis between attention/FFN.
+    * ``ep_over_dp``  — expert parallelism spans the full mesh
+                        (dp x model) instead of the model axis only.
+    """
+    names = tuple(mesh.axis_names)
+    model_axis = "model" if "model" in names else None
+    dp_axes = tuple(n for n in names if n not in _NON_DP_AXES)
+    model_tuple = (model_axis,) if model_axis else ()
+    ep_axes = (dp_axes + model_tuple) if ep_over_dp else model_tuple
+    return DistContext(active=True, mesh=mesh, dp_axes=dp_axes,
+                       model_axis=model_axis, ep_axes=ep_axes,
+                       ep_over_dp=ep_over_dp, fsdp=fsdp, zero1=zero1,
+                       seq_parallel=seq_parallel)
+
+
+def no_dist() -> DistContext:
+    """Single-device context: ``active=False``, every size 1,
+    ``constrain`` is the identity and ``sharding`` returns None."""
+    return DistContext(active=False)

@@ -1,0 +1,70 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+``gpipe_apply`` splits a stack of L identical layers into
+``L // layers_per_stage`` contiguous stages, one per device along the
+stage axis, and streams microbatches through them: at step t, stage s
+runs microbatch t-s and hands its activation to stage s+1 via
+``ppermute``. Total steps = n_micro + n_stages - 1 (fill + drain
+bubble); numerics match sequential layer application exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_apply(layer_fn, ws, x, *, mesh, layers_per_stage,
+                stage_axis: str = "stage"):
+    """Apply L stacked layers to microbatched inputs, pipelined.
+
+    layer_fn:        ``(w, h) -> h`` single-layer apply.
+    ws:              ``[L, ...]`` stacked layer weights.
+    x:               ``[n_micro, ...microbatch...]`` inputs.
+    mesh:            mesh containing ``stage_axis``.
+    layers_per_stage: contiguous layers owned by each stage;
+                     ``L == layers_per_stage * mesh.shape[stage_axis]``.
+
+    Returns ``[n_micro, ...]`` outputs equal to applying all L layers
+    sequentially to every microbatch.
+    """
+    n_stages = mesh.shape[stage_axis]
+    L = ws.shape[0]
+    if L != layers_per_stage * n_stages:
+        raise ValueError(f"{L} layers != {layers_per_stage} x {n_stages}")
+    n_micro = x.shape[0]
+    n_steps = n_micro + n_stages - 1
+    ws_staged = ws.reshape(n_stages, layers_per_stage, *ws.shape[1:])
+    shift = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(wb, xb):
+        w_s = wb[0]                                     # [lps, ...]
+        sid = jax.lax.axis_index(stage_axis)
+
+        def apply_stage(h):
+            h, _ = jax.lax.scan(lambda c, w: (layer_fn(w, c), None), h, w_s)
+            return h
+
+        def step(carry, t):
+            buf, out = carry
+            # stage 0 injects a fresh microbatch; others use the handoff
+            inj = xb[jnp.clip(t, 0, n_micro - 1)]
+            y = apply_stage(jnp.where(sid == 0, inj, buf))
+            # the last stage finishes microbatch t - (n_stages - 1)
+            mb = t - (n_stages - 1)
+            j = jnp.clip(mb, 0, n_micro - 1)
+            write = (sid == n_stages - 1) & (mb >= 0)
+            out = out.at[j].set(jnp.where(write, y, out[j]))
+            return (jax.lax.ppermute(y, stage_axis, shift), out), None
+
+        buf0 = jnp.zeros(xb.shape[1:], xb.dtype)
+        (_, out), _ = jax.lax.scan(step, (buf0, jnp.zeros_like(xb)),
+                                   jnp.arange(n_steps))
+        # only the last stage holds real outputs; replicate them
+        out = jnp.where(sid == n_stages - 1, out, jnp.zeros_like(out))
+        return jax.lax.psum(out, stage_axis)
+
+    w_spec = P(stage_axis, *([None] * ws.ndim))
+    x_spec = P(*([None] * x.ndim))
+    return jax.shard_map(body, mesh=mesh, in_specs=(w_spec, x_spec),
+                         out_specs=x_spec, check_vma=False)(ws_staged, x)

@@ -1,0 +1,85 @@
+"""PartitionSpec sanitation and pytree sharding construction.
+
+Model code writes *intent* specs (``P(('data',), 'model')`` …) without
+knowing the mesh it will run on or whether the (possibly ``reduced()``)
+tensor dims divide the axis sizes. ``sanitize_spec`` reconciles one spec
+against a concrete shape + mesh; ``sanitize_specs``/``tree_shardings``
+lift that over pytrees — including the ZeRO-1 dp-sharded optimizer trees
+built by ``train.loop.train_state_specs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _entry_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Optional[Mesh]) -> P:
+    """Make ``spec`` valid for an array of ``shape`` on ``mesh``.
+
+    Per dimension: axis names absent from the mesh are dropped; then,
+    while the product of the remaining axis sizes does not divide the
+    dimension, axes are dropped from the right (innermost first). A spec
+    shorter than the rank is padded with ``None``; extra entries beyond
+    the rank are discarded. With no mesh the result is fully replicated.
+    """
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    sizes = dict(mesh.shape)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        axes = [a for a in _entry_axes(entry) if a in sizes]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                break
+            axes.pop()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def _map_with_specs(fn, tree: Any, specs: Any):
+    """tree_map over (tree, specs) treating PartitionSpecs as leaves of
+    the second tree (they are tuple-like in some JAX versions, so plain
+    tree_map could wrongly recurse into them)."""
+    leaves, tdef = jax.tree_util.tree_flatten(tree)
+    spec_leaves = tdef.flatten_up_to(specs)
+    return tdef.unflatten([fn(l, s) for l, s in zip(leaves, spec_leaves)])
+
+
+def sanitize_specs(tree: Any, specs: Any, mesh: Optional[Mesh]) -> Any:
+    """Sanitize a pytree of PartitionSpecs against a matching pytree of
+    arrays / ShapeDtypeStructs (anything with ``.shape``)."""
+    return _map_with_specs(
+        lambda a, s: sanitize_spec(s if s is not None else P(), a.shape, mesh),
+        tree, specs)
+
+
+def tree_shardings(dist, tree: Any, specs: Any) -> Any:
+    """Pytree of sanitized ``NamedSharding``s for ``tree`` on
+    ``dist.mesh`` (None when the context is inactive), e.g. for
+    ``jax.jit`` in/out shardings or ``jax.device_put`` placement."""
+    if not dist.active:
+        return None
+    mesh = dist.mesh
+    return _map_with_specs(
+        lambda a, s: NamedSharding(
+            mesh, sanitize_spec(s if s is not None else P(), a.shape, mesh)),
+        tree, specs)

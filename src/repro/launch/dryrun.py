@@ -150,13 +150,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                 "status": "error", "error": f"{type(e).__name__}: {e}",
                 "trace": traceback.format_exc()[-2000:]}
-    xla_cost = compiled.cost_analysis()
+    xla_cost = hlo_cost.xla_cost_analysis(compiled)
     mem = compiled.memory_analysis()
     mem_d = {k: int(getattr(mem, k)) for k in
              ("argument_size_in_bytes", "output_size_in_bytes",
               "temp_size_in_bytes", "generated_code_size_in_bytes")
              if hasattr(mem, k)}
-    print(compiled.memory_analysis())
     hlo = compiled.as_text()
     totals = hlo_cost.analyze(hlo, default_group=meta["mesh_devices"])
     cfg, shape = meta["cfg"], meta["shape"]

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import repro.dist  # noqa: F401  (installs the jax.shard_map compat shim)
 from repro.configs.base import ArchConfig, MoEConfig
 from repro.models.layers import ACTS, dt, init_dense, dense
 

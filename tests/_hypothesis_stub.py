@@ -1,0 +1,100 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface
+this suite uses, installed by conftest.py ONLY when the real package is
+absent (the declared dev extra in pyproject.toml is the real thing).
+
+Covers: ``given``, ``settings(max_examples=, deadline=)`` and the
+strategies ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+``lists``, ``tuples``. Draws are deterministic (seeded per test name and
+example index) so runs are reproducible; there is no shrinking — a
+failure reports the drawn arguments verbatim.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(1 << 16) if min_value is None else min_value
+    hi = (1 << 16) if max_value is None else max_value
+    return Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = min_size + 10 if max_size is None else max_size
+    return Strategy(lambda rng: [elements.example(rng)
+                                 for _ in range(rng.randint(min_size, hi))])
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def apply(f):
+        f._stub_max_examples = max_examples
+        return f
+    return apply
+
+
+def given(*strategies):
+    def decorate(f):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(f"{f.__module__}.{f.__name__}:{i}")
+                args = tuple(s.example(rng) for s in strategies)
+                try:
+                    f(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{f.__name__} failed on example {i}: "
+                        f"args={args!r}") from e
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        return wrapper
+    return decorate
+
+
+def install():
+    """Register stub modules as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for mod in (hyp, st):
+        mod.integers = integers
+        mod.floats = floats
+        mod.booleans = booleans
+        mod.sampled_from = sampled_from
+        mod.lists = lists
+        mod.tuples = tuples
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,17 @@
+"""Suite-wide setup.
+
+`hypothesis` is a declared dev dependency (pyproject.toml), but the
+property tests must still collect and run in minimal environments where
+it is not installed: fall back to the deterministic stub in
+``_hypothesis_stub`` (same API subset, no shrinking).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
