@@ -9,7 +9,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.experiments import fig2_sensitivity
 from repro.kernels.chacha20 import keystream
 from repro.kernels.ref import chacha20_keystream_ref
 

@@ -22,7 +22,7 @@ from repro.core.muqss import SchedConfig  # noqa: E402
 from repro.core.perfcounters import collect, cross_check  # noqa: E402
 from repro.core.simulator import Simulator  # noqa: E402
 from repro.core.static_analysis import (  # noqa: E402
-    FunctionProfile, analyze_jaxpr, rank_functions, report)
+    FunctionProfile, rank_functions, report)
 from repro.core.workloads import WebConfig, webserver_tasks  # noqa: E402
 
 

@@ -17,10 +17,10 @@ def main():
     print("nginx/OpenSSL/brotli web-server simulation "
           "(12 cores, 2 AVX cores, ~55k type changes/s)\n")
     res = fig5_throughput(sim_us=1_000_000)
-    print(f"{'config':18s} {'throughput':>10s} {'normalized':>10s} "
-          f"{'avg freq':>9s} {'freq drop':>9s}")
+    print(f"{'config':18s} {'policy':>12s} {'throughput':>10s} "
+          f"{'normalized':>10s} {'avg freq':>9s} {'freq drop':>9s}")
     for k, v in res.items():
-        print(f"{k:18s} {v['throughput_rps']:8.0f}/s "
+        print(f"{k:18s} {v['policy']:>12s} {v['throughput_rps']:8.0f}/s "
               f"{v['normalized']:10.3f} {v['avg_freq_ghz']:7.2f}GHz "
               f"{100 * (1 - v['avg_freq_ghz'] / F0):8.1f}%")
     print()

@@ -4,7 +4,6 @@
 """
 import argparse
 import json
-import sys
 from pathlib import Path
 
 RESULTS = Path("results")

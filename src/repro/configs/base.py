@@ -7,8 +7,8 @@ single ``CONFIG: ArchConfig`` with the exact published hyperparameters.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)

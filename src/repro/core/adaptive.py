@@ -17,8 +17,7 @@ ratio or utilization collapses).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 from repro.core.license import LicenseConfig
 

@@ -4,7 +4,6 @@ can assert the paper's headline numbers.
 """
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Dict, List, Optional
 
 from repro.core.license import LicenseConfig
@@ -15,6 +14,8 @@ from repro.core.workloads import (
     OverheadConfig, WebConfig, crypto_microbench, overhead_tasks,
     webserver_tasks,
 )
+from repro.sched import (CohortPolicy, Policy, SharedBaselinePolicy,
+                         SpecializedPolicy, Topology)
 
 N_CORES = 12          # paper: web server on 12 of 16 cores
 N_AVX = 2             # paper: SSL restricted to the last two cores
@@ -24,19 +25,28 @@ SIM_US = 3_000_000.0  # 3 simulated seconds
 def run_webserver(isa: str, specialization: bool, *,
                   compressed: bool = True, sim_us: float = SIM_US,
                   n_cores: int = N_CORES, n_avx: int = N_AVX,
-                  seed: int = 0, ipc_bonus: float = 0.007) -> Dict:
+                  seed: int = 0, ipc_bonus: float = 0.007,
+                  policy: Optional[Policy] = None) -> Dict:
+    """One webserver run through the shared repro.sched API: the core
+    partition is an explicit Topology, the specialization decision an
+    explicit Policy (override `policy` to plug in a custom one)."""
     wcfg = WebConfig(isa=isa, compressed=compressed, seed=seed,
                      n_conns=2 * n_cores)
     scfg = SchedConfig(n_cores=n_cores, n_avx_cores=n_avx,
                        specialization=specialization)
+    topo = Topology.cores(n_cores, n_avx if specialization else 0)
+    pol = policy or (SpecializedPolicy() if specialization
+                     else SharedBaselinePolicy())
     sim = Simulator(scfg, LicenseConfig(),
-                    ipc_locality_bonus=ipc_bonus if specialization else 0.0)
+                    ipc_locality_bonus=ipc_bonus if specialization else 0.0,
+                    topology=topo, policy=pol)
     for task in webserver_tasks(wcfg):
         sim.add_task(task, 0.0)
     m = sim.run(sim_us)
     return {
         "isa": isa,
         "spec": specialization,
+        "policy": pol.name,
         "throughput_rps": m.throughput_per_s(),
         "avg_freq_ghz": sim.avg_frequency_ghz(),
         "p50_us": m.p(0.50),
@@ -97,7 +107,8 @@ def run_cohort(isa: str, *, sim_us: float = SIM_US, n_cores: int = N_CORES,
     from repro.core.workloads import cohort_tasks
     wcfg = WebConfig(isa=isa, seed=seed, n_conns=2 * n_cores)
     scfg = SchedConfig(n_cores=n_cores, n_avx_cores=0, specialization=False)
-    sim = Simulator(scfg, LicenseConfig())
+    sim = Simulator(scfg, LicenseConfig(), topology=Topology.shared(n_cores),
+                    policy=CohortPolicy(batch_n))
     for task in cohort_tasks(wcfg, batch_n):
         sim.add_task(task, 0.0)
     m = sim.run(sim_us)

@@ -15,18 +15,38 @@ Faithful to §3.1–3.2:
   * untyped tasks run anywhere (system tasks pinned to AVX cores must not
     be starved — they do not get the scalar penalty).
 
+The scheduler is pure mechanism: the core partition is a
+:class:`repro.sched.topology.Topology` (the ``avx``/``scalar`` pools)
+and every allowed-queues / penalty / placement / preemption decision is
+delegated to a :class:`repro.sched.policy.Policy` — the same API the
+serving engine (`sched/engine.py`) consumes. ``SchedConfig.n_avx_cores``
+and ``specialization`` survive as conveniences that build the default
+``Topology.cores(...)`` + ``SpecializedPolicy`` pair.
+
 Virtual deadlines: MuQSS computes deadline = niffies + prio_ratio *
 rr_interval; with equal priorities this is FIFO-ish within a quantum.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Set, Tuple
 
 from repro.core.runqueue import CoreRunQueues
 from repro.core.task import Task, TaskType
+from repro.sched.policy import (LIGHT_PENALTY, Policy, SharedBaselinePolicy,
+                                SpecializedPolicy)
+from repro.sched.topology import Topology, WorkKind
 
-SCALAR_PENALTY = 1e12          # added to scalar deadlines on AVX cores
+SCALAR_PENALTY = LIGHT_PENALTY  # added to scalar deadlines on AVX cores
+
+# TaskType <-> WorkKind: the scheduler speaks TaskType (the paper's
+# annotation API), the policy speaks WorkKind (mechanism-agnostic).
+KIND_OF: Dict[TaskType, WorkKind] = {
+    TaskType.SCALAR: WorkKind.LIGHT,
+    TaskType.AVX: WorkKind.HEAVY,
+    TaskType.UNTYPED: WorkKind.ANY,
+}
+TASKTYPE_OF: Dict[WorkKind, TaskType] = {v: k for k, v in KIND_OF.items()}
 
 
 @dataclass(frozen=True)
@@ -39,17 +59,52 @@ class SchedConfig:
     sched_cost_us: float = 0.05        # per scheduler invocation
     ipi_cost_us: float = 0.15          # preemption IPI delivery
 
+    def topology(self) -> Topology:
+        """The default core layout this config describes."""
+        return Topology.cores(
+            self.n_cores, self.n_avx_cores if self.specialization else 0)
+
+    def default_policy(self, topology: Topology) -> Policy:
+        if len(topology.pools) > 1:
+            return SpecializedPolicy()
+        return SharedBaselinePolicy()
+
 
 class Scheduler:
-    def __init__(self, cfg: SchedConfig):
+    def __init__(self, cfg: SchedConfig,
+                 topology: Optional[Topology] = None,
+                 policy: Optional[Policy] = None):
         self.cfg = cfg
-        self.rqs = [CoreRunQueues(i) for i in range(cfg.n_cores)]
-        self.avx_cores: Set[int] = set(
-            range(cfg.n_cores - cfg.n_avx_cores, cfg.n_cores)) \
-            if cfg.specialization else set()
+        self.topo = topology if topology is not None else cfg.topology()
+        self.policy = policy if policy is not None \
+            else cfg.default_policy(self.topo)
+        self.n_cores = self.topo.n_units
+        self.rqs = [CoreRunQueues(i) for i in range(self.n_cores)]
+        # cores of dedicated heavy pools (empty when nothing is split)
+        self.avx_cores: Set[int] = set()
+        if len(self.topo.pools_with(WorkKind.HEAVY)) < len(self.topo.pools):
+            for p in self.topo.pools_with(WorkKind.HEAVY):
+                self.avx_cores.update(p.units)
         self.running: Dict[int, Optional[Task]] = {
-            i: None for i in range(cfg.n_cores)}
+            i: None for i in range(self.n_cores)}
         self.preempt_requests: Set[int] = set()
+        # The topology is static for a Scheduler's lifetime, so the
+        # per-core policy answers are snapshotted off the hot path
+        # (pick_next/_kick run every few simulated microseconds).
+        pools = [self.topo.pool_of_unit(c) for c in range(self.n_cores)]
+        self._allowed = [tuple(TASKTYPE_OF[k] for k in
+                               self.policy.queue_order(self.topo, p))
+                         for p in pools]
+        self._penalty = [{TASKTYPE_OF[k]: v for k, v in
+                          self.policy.penalty(self.topo, p).items()}
+                         for p in pools]
+        self._can_run = [{tt: self.policy.eligible(self.topo, p,
+                                                   KIND_OF[tt])
+                          for tt in TaskType} for p in pools]
+        self._placement = {
+            tt: [u for n in self.policy.placement(self.topo, KIND_OF[tt])
+                 for u in self.topo.pool(n).units] for tt in TaskType}
+        self._pool_of_unit = pools
         # stats
         self.migrations = 0
         self.type_changes = 0
@@ -59,20 +114,21 @@ class Scheduler:
 
     # ------------------------------------------------------------ helpers
 
+    @property
+    def specialized(self) -> bool:
+        return bool(self.avx_cores)
+
     def is_avx_core(self, core: int) -> bool:
         return core in self.avx_cores
 
+    def can_run(self, core: int, ttype: TaskType) -> bool:
+        return self._can_run[core][ttype]
+
     def allowed_queues(self, core: int) -> Tuple[TaskType, ...]:
-        if not self.cfg.specialization:
-            return (TaskType.SCALAR, TaskType.AVX, TaskType.UNTYPED)
-        if self.is_avx_core(core):
-            return (TaskType.AVX, TaskType.UNTYPED, TaskType.SCALAR)
-        return (TaskType.SCALAR, TaskType.UNTYPED)
+        return self._allowed[core]
 
     def deadline_penalty(self, core: int) -> Dict[TaskType, float]:
-        if self.cfg.specialization and self.is_avx_core(core):
-            return {TaskType.SCALAR: SCALAR_PENALTY}
-        return {}
+        return self._penalty[core]
 
     def set_deadline(self, task: Task, now: float):
         task.deadline = now + self.cfg.rr_interval_us
@@ -88,14 +144,9 @@ class Scheduler:
 
     def _choose_core(self, task: Task) -> int:
         """Queue on the allowed core with the fewest queued tasks,
-        preferring the task's last core (cache affinity)."""
-        if not self.cfg.specialization:
-            cands = range(self.cfg.n_cores)
-        elif task.ttype == TaskType.AVX:
-            cands = sorted(self.avx_cores)
-        else:
-            cands = [c for c in range(self.cfg.n_cores)
-                     if c not in self.avx_cores] or list(range(self.cfg.n_cores))
+        preferring the task's last core (cache affinity). Which cores are
+        allowed is the policy's placement decision."""
+        cands = self._placement[task.ttype]
         if task.last_core in cands and self.rqs[task.last_core].total() == 0:
             return task.last_core
         return min(cands, key=lambda c: self.rqs[c].total())
@@ -144,39 +195,41 @@ class Scheduler:
         (paper: an AVX task on a scalar core is suspended immediately).
         preempt_core: an AVX core currently running a scalar task that
         should receive an IPI so it can pick up the new AVX task.
+
+        The decision comes from the policy; finding the IPI target and
+        checking queue occupancy are mechanism.
         """
         task.type_changes += 1
         self.type_changes += 1
-        old = task.ttype
         task.ttype = new_type
-        if not self.cfg.specialization:
-            return (False, None)
         core = task.running_on
-        if new_type == TaskType.AVX and core is not None \
-                and not self.is_avx_core(core):
-            # scalar core must never run AVX work: suspend + requeue
+        pool = self._pool_of_unit[core] if core is not None else None
+        dec = self.policy.on_type_change(self.topo, pool, KIND_OF[new_type])
+        if dec.migrate:
+            # current core must never run this kind: suspend + requeue,
+            # and IPI a heavy core running stolen light work (if any —
+            # an idle heavy core will naturally pick the task up).
             preempt = None
-            for c in self.avx_cores:
-                r = self.running.get(c)
-                if r is not None and r.ttype == TaskType.SCALAR:
-                    preempt = c
-                    break
-                if r is None:
-                    preempt = None  # an idle AVX core will naturally pick it
-                    break
+            if dec.preempt:
+                for c in sorted(self.avx_cores):
+                    r = self.running.get(c)
+                    if r is not None and r.ttype == TaskType.SCALAR:
+                        preempt = c
+                        break
+                    if r is None:
+                        preempt = None
+                        break
             if preempt is not None:
                 self.ipis += 1
                 self.preempt_requests.add(preempt)
             return (True, preempt)
-        if new_type == TaskType.SCALAR and core is not None \
-                and self.is_avx_core(core):
-            # allowed (asymmetric policy) — keep running, no migration,
-            # unless an AVX task is waiting for this core
+        if dec.yield_if_heavy_waiting:
+            # asymmetric policy: keep running light work on the heavy
+            # pool unless heavy work is queued for it
             waiting = any(len(self.rqs[c].queues[TaskType.AVX]) > 0
                           for c in self.avx_cores)
             if waiting:
                 return (True, None)
-            return (False, None)
         return (False, None)
 
     def should_preempt(self, core: int) -> bool:

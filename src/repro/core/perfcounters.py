@@ -11,10 +11,10 @@ or read directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from repro.core.simulator import Metrics, Simulator
+from repro.core.simulator import Simulator
 
 
 @dataclass

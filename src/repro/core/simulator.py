@@ -17,11 +17,13 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.license import CoreLicense, LicenseConfig
 from repro.core.muqss import SchedConfig, Scheduler
 from repro.core.task import IClass, Segment, Task, TaskType, TypeChange
+from repro.sched.policy import Policy
+from repro.sched.topology import Topology
 
 CHUNK_US = 25.0   # preemption (IPI) granularity
 
@@ -56,17 +58,22 @@ class Metrics:
 class Simulator:
     def __init__(self, sched_cfg: SchedConfig,
                  lic_cfg: LicenseConfig = LicenseConfig(),
-                 ipc_locality_bonus: float = 0.0):
+                 ipc_locality_bonus: float = 0.0,
+                 topology: Optional[Topology] = None,
+                 policy: Optional[Policy] = None):
         """ipc_locality_bonus: fractional IPC gain on cores with a reduced
-        code footprint under specialization (paper §4.2 measured +0.7%)."""
-        self.sched = Scheduler(sched_cfg)
-        self.lic = [CoreLicense(lic_cfg) for _ in range(sched_cfg.n_cores)]
+        code footprint under specialization (paper §4.2 measured +0.7%).
+        topology/policy: explicit repro.sched layout + decisions; default
+        derives both from sched_cfg (n_avx_cores / specialization)."""
+        self.sched = Scheduler(sched_cfg, topology=topology, policy=policy)
+        n_cores = self.sched.n_cores
+        self.lic = [CoreLicense(lic_cfg) for _ in range(n_cores)]
         self.cfg = sched_cfg
         self.ipc_bonus = ipc_locality_bonus
         self.metrics = Metrics()
         self._events: List[Tuple[float, int, int, object]] = []
         self._seq = itertools.count()
-        self._idle: set = set(range(sched_cfg.n_cores))
+        self._idle: set = set(range(n_cores))
         self._quantum_end: Dict[int, float] = {}
         self._req_start: Dict[int, float] = {}
 
@@ -101,10 +108,9 @@ class Simulator:
         self._kick(t, task.ttype)
 
     def _kick(self, t: float, ttype: TaskType):
-        """Wake an idle core allowed to run this task type."""
+        """Wake an idle core the policy allows to run this task type."""
         for core in sorted(self._idle):
-            if ttype == TaskType.AVX and self.cfg.specialization \
-                    and not self.sched.is_avx_core(core):
+            if not self.sched.can_run(core, ttype):
                 continue
             self._idle.discard(core)
             self._push(t, "pick", core)
@@ -160,7 +166,7 @@ class Simulator:
         nominal_chunk = CHUNK_US * lic.cfg.freqs_ghz[0] * 1000.0
         remaining = seg.cycles - task.seg_done_cycles
         run = min(remaining, nominal_chunk)
-        if self.ipc_bonus and self.cfg.specialization \
+        if self.ipc_bonus and self.sched.specialized \
                 and seg.iclass == IClass.SCALAR:
             run_eff = run / (1.0 + self.ipc_bonus)
         else:

@@ -14,7 +14,7 @@ per-function measurement.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 import jax
 import numpy as np

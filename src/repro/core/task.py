@@ -11,7 +11,7 @@ import enum
 import itertools
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import Callable, Iterator, Optional, Tuple
 
 
 class TaskType(enum.Enum):

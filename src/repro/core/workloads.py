@@ -16,9 +16,8 @@ frequency drops (11.4% / 4.4%), and everything else follows.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -8,10 +8,8 @@ and changing n_hosts re-partitions without replaying (cursor is global).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from pathlib import Path
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

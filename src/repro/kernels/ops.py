@@ -1,7 +1,6 @@
 """jit'd public wrappers for the Pallas kernels."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.chacha20 import keystream as chacha20_keystream

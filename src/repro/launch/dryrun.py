@@ -32,8 +32,7 @@ from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models.api import build_model
 from repro.roofline import analysis as roofline
 from repro.roofline import hlo_cost
-from repro.train.loop import (init_opt_state, jit_train_step,
-                              train_state_specs)
+from repro.train.loop import init_opt_state, jit_train_step
 from repro.train.optimizer import OptConfig
 
 # tokens-per-device memory pressure -> grad accumulation (recorded in

@@ -1,11 +1,18 @@
 """Serving driver: a real (small) model behind the specialization engine.
 
-Runs actual jitted prefill/decode of a reduced-config model on CPU with
-batched requests through the two-pool scheduler; demonstrates the
-annotation workflow end-to-end (static analysis tags prefill heavy).
+Runs actual jitted prefill/decode of a reduced-config model on CPU,
+driven by the event-driven engine (`repro.sched.engine`) — the same
+scheduler code the benchmarks exercise, with service times *measured*
+from the real jitted calls instead of modelled. The annotation workflow
+runs end-to-end: static analysis ranks the two step functions, tags the
+heavy (AVX-analogue) phase, and the ``SpecializedPolicy`` confines it
+to the prefill pool of a two-pool ``Topology``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 16 --prompt 64 --max-new 16
+
+``--mode loop`` keeps the plain batched loop (no scheduler) for
+comparison.
 """
 import argparse
 import time
@@ -18,27 +25,75 @@ from repro.configs import get_arch
 from repro.core.static_analysis import rank_functions, report
 from repro.dist.context import no_dist
 from repro.models.api import build_model
+from repro.sched import SpecializedPolicy, Topology
+from repro.sched.engine import Engine, Request, ServeConfig
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--prompt", type=int, default=64)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+class RealModelExecutor:
+    """Engine executor that runs real jitted prefill/decode steps.
 
-    cfg = get_arch(args.arch).reduced()
-    model = build_model(cfg, no_dist())
-    params = model.init(jax.random.key(args.seed))
-    B, P, N = args.batch, args.prompt, args.max_new
-    max_seq = P + N
+    The engine calls ``prefill``/``decode`` when its schedule says so;
+    we execute the actual computation and return the measured wall-clock
+    duration in ms, which becomes the simulated service time. Per-request
+    KV caches live here, keyed by request id — the handoff the engine
+    charges between pools corresponds to moving one of these caches.
+    """
 
-    # --- identification workflow: rank the two step functions (§3.3) ----
-    toks = jnp.zeros((B, P), jnp.int32)
-    cache = model.init_cache(params, {"tokens": toks}, B, max_seq)
+    def __init__(self, model, params, vocab: int, prompt_len: int,
+                 max_seq: int, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.vocab = vocab
+        self.prompt_len = prompt_len
+        self.max_seq = max_seq
+        self.rng = np.random.default_rng(seed)
+        self.state = {}          # rid -> (cache, last_tok, length)
+        self.prefill_j = jax.jit(
+            lambda p, t, c: model.prefill(p, {"tokens": t}, c))
+        self.decode_j = jax.jit(
+            lambda p, c, t, l: model.decode_step(p, c, t, l))
+
+    def prefill(self, req: Request, chunk: int, pool: str,
+                ndev: int) -> float:
+        # the jitted prefill is not chunkable: the whole prompt runs (and
+        # is charged) on the first chunk call; later chunk calls for the
+        # same request are free — total charged time stays the real cost
+        if req.rid in self.state:
+            return 0.0
+        toks = jnp.asarray(self.rng.integers(
+            0, self.vocab, size=(1, self.prompt_len)), dtype=jnp.int32)
+        cache = self.model.init_cache(self.params, {"tokens": toks}, 1,
+                                      self.max_seq)
+        t0 = time.time()
+        logits, cache = self.prefill_j(self.params, toks, cache)
+        logits.block_until_ready()
+        dur_ms = (time.time() - t0) * 1e3
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        self.state[req.rid] = (cache, tok,
+                               jnp.full((1,), self.prompt_len, jnp.int32))
+        return dur_ms
+
+    def decode(self, batch, pool: str, ndev: int) -> float:
+        t0 = time.time()
+        for req in batch:
+            cache, tok, length = self.state[req.rid]
+            logits, cache = self.decode_j(self.params, cache, tok, length)
+            logits.block_until_ready()
+            if req.generated + 1 >= req.max_new:
+                # request finishes with this token: drop its KV cache so
+                # executor memory scales with concurrency, not total served
+                self.state.pop(req.rid)
+            else:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                self.state[req.rid] = (cache, tok, length + 1)
+        return (time.time() - t0) * 1e3
+
+
+def identify_heavy_phase(model, params, batch: int, prompt: int,
+                         max_seq: int):
+    """§3.3 identification workflow on the two step functions."""
+    toks = jnp.zeros((batch, prompt), jnp.int32)
+    cache = model.init_cache(params, {"tokens": toks}, batch, max_seq)
 
     def prefill_fn(p, t, c):
         return model.prefill(p, {"tokens": t}, c)
@@ -49,17 +104,64 @@ def main(argv=None):
     ranked = rank_functions([
         ("prefill_step", prefill_fn, (params, toks, cache)),
         ("decode_step", decode_fn,
-         (params, cache, toks[:, :1], jnp.full((B,), P))),
+         (params, cache, toks[:, :1], jnp.full((batch,), prompt))),
     ])
+    return ranked
+
+
+def run_engine(args, cfg, model, params):
+    """Real-model serving through the Policy/Topology engine."""
+    P, N = args.prompt, args.max_new
+    max_seq = P + N
+    ranked = identify_heavy_phase(model, params, args.batch, P, max_seq)
     print("[serve] static analysis (heavy-op report):")
     print(report(ranked))
     heavy = ranked[0].name
-    print(f"[serve] tagging {heavy!r} as the heavy (AVX-analogue) phase\n")
+    print(f"[serve] tagging {heavy!r} as the heavy (AVX-analogue) phase;"
+          " SpecializedPolicy confines it to the prefill pool\n")
 
-    prefill_j = jax.jit(prefill_fn)
-    decode_j = jax.jit(decode_fn)
+    topo = Topology.serving(n_devices=2, prefill_devices=1)
+    policy = SpecializedPolicy()
+    ex = RealModelExecutor(model, params, cfg.vocab, P, max_seq,
+                           seed=args.seed)
+    interval_ms = 1000.0 / args.rate
+    reqs = [Request(rid=i, arrive_ms=i * interval_ms, prompt_len=P,
+                    max_new=N) for i in range(args.requests)]
+    eng = Engine(topo, policy,
+                 cfg=ServeConfig(prefill_chunk=P,
+                                 decode_batch_max=args.batch),
+                 executor=ex)
+    t0 = time.time()
+    m = eng.run(reqs)               # no horizon: run to completion
+    wall = time.time() - t0
+    s = m.summary()
+    total_tokens = m.completed * N
+    print(f"[serve] {m.completed}/{args.requests} requests, "
+          f"{total_tokens} tokens in {wall:.1f}s wall")
+    print(f"[serve] ttft_p50={s['ttft_p50_ms']:.1f}ms "
+          f"ttft_p99={s['ttft_p99_ms']:.1f}ms "
+          f"itl_p50={s['itl_p50_ms']:.1f}ms "
+          f"itl_p99={s['itl_p99_ms']:.1f}ms")
+    busy = ", ".join(
+        "{}: heavy={:.0f}ms light={:.0f}ms".format(k, v["heavy"], v["light"])
+        for k, v in m.pool_busy.items())
+    print(f"[serve] handoffs={s['handoffs']} steals={s['steals']} "
+          f"pool_busy={{{busy}}}")
+    return m
 
-    # --- batched serving loop ------------------------------------------
+
+def run_loop(args, cfg, model, params):
+    """Plain batched loop (the pre-engine behaviour), kept for
+    comparison."""
+    B, P, N = args.batch, args.prompt, args.max_new
+    max_seq = P + N
+    ranked = identify_heavy_phase(model, params, B, P, max_seq)
+    print("[serve] static analysis (heavy-op report):")
+    print(report(ranked))
+    print(f"[serve] tagging {ranked[0].name!r} as the heavy phase\n")
+
+    prefill_j = jax.jit(lambda p, t, c: model.prefill(p, {"tokens": t}, c))
+    decode_j = jax.jit(lambda p, c, t, l: model.decode_step(p, c, t, l))
     rng = np.random.default_rng(args.seed)
     n_batches = (args.requests + B - 1) // B
     t0 = time.time()
@@ -89,6 +191,28 @@ def main(argv=None):
     dt_ = time.time() - t0
     print(f"[serve] {total_tokens} tokens in {dt_:.1f}s "
           f"({total_tokens/dt_:.0f} tok/s)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--mode", choices=("engine", "loop"), default="engine")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="request arrival rate (req/s of engine time)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg, no_dist())
+    params = model.init(jax.random.key(args.seed))
+    if args.mode == "engine":
+        run_engine(args, cfg, model, params)
+    else:
+        run_loop(args, cfg, model, params)
 
 
 if __name__ == "__main__":

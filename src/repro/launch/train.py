@@ -13,7 +13,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, DataState, Pipeline

@@ -16,7 +16,6 @@ a cross-check oracle (see tests/test_mla.py).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

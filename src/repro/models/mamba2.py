@@ -11,12 +11,11 @@ what makes zamba2/long_500k runnable (see DESIGN.md §Arch-applicability).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SSMConfig
+from repro.configs.base import ArchConfig
 from repro.models.layers import dt as _dt, rmsnorm
 
 

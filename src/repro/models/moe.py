@@ -25,16 +25,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 import repro.dist  # noqa: F401  (installs the jax.shard_map compat shim)
-from repro.configs.base import ArchConfig, MoEConfig
-from repro.models.layers import ACTS, dt, init_dense, dense
+from repro.configs.base import ArchConfig
+from repro.models.layers import ACTS, dt
 
 
 @dataclass(frozen=True)

@@ -11,8 +11,6 @@ never materialize ([B,S,V] at 129k vocab would dominate memory).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,14 @@
+"""Shared scheduling API: Topology (mechanism-agnostic pool layout),
+Policy (placement / stealing / preemption / resizing decisions), and the
+event-driven serving engine. `core/muqss.py` (OS simulator) and
+`sched/engine.py` (serving) both consume this API."""
+from repro.sched.policy import (AdaptivePolicy, CohortPolicy, LoadSignals,
+                                Policy, SharedBaselinePolicy,
+                                SpecializedPolicy, TypeChangeDecision)
+from repro.sched.topology import Pool, Topology, WorkKind
+
+__all__ = [
+    "AdaptivePolicy", "CohortPolicy", "LoadSignals", "Policy", "Pool",
+    "SharedBaselinePolicy", "SpecializedPolicy", "Topology",
+    "TypeChangeDecision", "WorkKind",
+]

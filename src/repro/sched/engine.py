@@ -1,38 +1,39 @@
-"""Serving engine with device-pool core specialization (DESIGN.md §2.2).
+"""Event-driven serving engine on the shared Policy/Topology API.
 
 The paper's mechanism, transplanted: prefill (MXU-saturating ≈ AVX task)
-is confined to a **prefill pool**; decode (memory-bound, latency-critical
-≈ scalar task) owns the rest. The asymmetric rule carries over exactly:
+is HEAVY work; decode (memory-bound, latency-critical ≈ scalar task) is
+LIGHT. The engine is pure mechanism — a heap of arrival/pool-free
+events over a :class:`repro.sched.topology.Topology` — and every
+placement / steal / preemption / resize decision is delegated to a
+:class:`repro.sched.policy.Policy`:
 
-  * the decode pool NEVER runs prefill (one interleaved prefill stalls
-    every co-located decode — the 2 ms-tail analogue);
-  * the prefill pool MAY run decode batches when idle (work conservation,
-    paper §2.1/Fig. 3);
-  * requests are deadline-scheduled (EDF within each queue, the MuQSS
-    ordering) and migrate pools after prefill via a KV-cache handoff whose
-    cost is charged explicitly (the 400-500 ns migration analogue).
+  * ``SpecializedPolicy`` reproduces the paper's asymmetric rule: the
+    decode pool NEVER prefills (one interleaved prefill stalls every
+    co-located decode — the 2 ms-tail analogue); the prefill pool MAY
+    run decode batches when idle (work conservation, §2.1/Fig. 3);
+  * ``SharedBaselinePolicy`` over ``Topology.shared(n)`` is vLLM-style
+    continuous batching with interleaved chunked prefill;
+  * requests are deadline-scheduled — EDF by
+    ``arrive_ms + deadline_window_ms`` — and migrate pools after
+    prefill via a KV-cache handoff charged to the source pool (the
+    400-500 ns migration analogue). Exactly one handoff is counted per
+    pool transfer.
 
-Two operating modes:
-  * ``PoolModel`` — service times derived from roofline terms of a
-    dry-run cell (used by benchmarks; deterministic);
-  * real-model mode via ``launch/serve.py`` (small model on CPU, same
-    scheduler code).
-
-The no-specialization baseline is the same engine with one shared pool
-interleaving prefill chunks between decode iterations — vLLM-style
-continuous batching without disaggregation.
+Service times come either from a :class:`PoolModel` (roofline terms of
+a dry-run cell; deterministic, used by benchmarks) or from a live
+``executor`` that runs real jitted prefill/decode and reports measured
+durations (``launch/serve.py``).
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.runqueue import DeadlineQueue
-from repro.core.task import Task, TaskType
+from repro.sched.policy import LoadSignals, Policy
+from repro.sched.topology import Topology, WorkKind
 
 
 @dataclass
@@ -50,7 +51,6 @@ class Request:
     done_ms: Optional[float] = None
     last_token_ms: Optional[float] = None
     deadline: float = 0.0
-    tid: int = 0
 
     @property
     def decoding(self) -> bool:
@@ -81,12 +81,13 @@ class PoolModel:
 
 @dataclass
 class ServeConfig:
-    n_devices: int = 8
-    prefill_devices: int = 2
-    specialization: bool = True
+    """Engine knobs. The pool layout and the specialization decision no
+    longer live here — they are the ``Topology`` and ``Policy`` passed
+    to :class:`Engine`."""
     prefill_chunk: int = 2048
     decode_batch_max: int = 256
     deadline_window_ms: float = 50.0
+    resize_interval_ms: float = 1000.0
 
 
 @dataclass
@@ -99,6 +100,19 @@ class ServeMetrics:
     decode_busy_ms: float = 0.0
     steals: int = 0
     handoffs: int = 0
+    # per-pool busy time by work kind ("heavy" = prefill, "light" = decode)
+    pool_busy: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # (t_ms, {pool: n_units}) for every applied policy resize
+    resize_events: List[Tuple[float, Dict[str, int]]] = \
+        field(default_factory=list)
+
+    def charge(self, pool: str, kind: str, ms: float):
+        slot = self.pool_busy.setdefault(pool, {"heavy": 0.0, "light": 0.0})
+        slot[kind] += ms
+        if kind == "heavy":
+            self.prefill_busy_ms += ms
+        else:
+            self.decode_busy_ms += ms
 
     def p(self, xs, q):
         if not xs:
@@ -108,7 +122,7 @@ class ServeMetrics:
 
     def summary(self) -> Dict[str, float]:
         return {
-            "throughput_tok_s": 1000.0 * sum(1 for _ in self.itl_ms)
+            "throughput_tok_s": 1000.0 * len(self.itl_ms)
             / self.total_ms if self.total_ms else 0.0,
             "ttft_p50_ms": self.p(self.ttft_ms, 0.5),
             "ttft_p99_ms": self.p(self.ttft_ms, 0.99),
@@ -117,123 +131,218 @@ class ServeMetrics:
             "completed": self.completed,
             "steals": self.steals,
             "handoffs": self.handoffs,
+            "resizes": len(self.resize_events),
         }
 
 
 class Engine:
-    """Discrete-time two-pool engine."""
+    """Event-driven engine: a heap of (arrival | pool-free) events.
 
-    def __init__(self, cfg: ServeConfig, model: PoolModel):
-        self.cfg = cfg
-        self.model = model
+    Replaces the discrete-time argmin loop: pools sleep when idle and
+    wake on the events that can give them work (arrivals for
+    heavy-eligible pools, handoffs/evictions for the target pool), so
+    simulated time advances directly between events.
+    """
 
-    def run(self, requests: List[Request], horizon_ms: float) -> ServeMetrics:
-        cfg, model = self.cfg, self.model
+    def __init__(self, topology: Topology, policy: Policy,
+                 model: Optional[PoolModel] = None,
+                 cfg: Optional[ServeConfig] = None,
+                 executor: Optional[object] = None):
+        self._topo0 = topology          # every run starts from this
+        self.topo = topology
+        self.policy = policy
+        self.model = model or PoolModel()
+        self.cfg = cfg or ServeConfig()
+        self.executor = executor
+
+    # ------------------------------------------------------------- run
+
+    def run(self, requests: List[Request],
+            horizon_ms: Optional[float] = None) -> ServeMetrics:
+        cfg, policy = self.cfg, self.policy
+        self.topo = self._topo0         # resizes do not leak across runs
         m = ServeMetrics()
-        if cfg.specialization:
-            pools = [("prefill", cfg.prefill_devices),
-                     ("decode", cfg.n_devices - cfg.prefill_devices)]
-        else:
-            pools = [("shared", cfg.n_devices)]
-        free_at = [0.0 for _ in pools]
-        waiting: List[Request] = []        # needs prefill (EDF by arrival)
-        active: List[List[Request]] = [[] for _ in pools]  # decoding per pool
-        pending = sorted(requests, key=lambda r: r.arrive_ms)
-        pi = 0
-        t = 0.0
-        # round-robin over pools by next-free time
-        while t < horizon_ms:
-            p = int(np.argmin(free_at))
-            t = max(free_at[p], t if any(
-                a for a in active) or waiting else (
-                pending[pi].arrive_ms if pi < len(pending) else horizon_ms))
-            if t >= horizon_ms:
+        horizon = float("inf") if horizon_ms is None else horizon_ms
+        n_units: Dict[str, int] = {p.name: p.n_units for p in self.topo}
+        active: Dict[str, List[Request]] = {p.name: [] for p in self.topo}
+        idle = set(n_units)
+        waiting: List[Tuple[float, int, Request]] = []   # EDF heap
+        events: List[Tuple[float, int, str, object]] = []
+        seq = 0
+
+        def push(t: float, kind: str, payload):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, payload))
+            seq += 1
+
+        def wake(pool: str, t: float):
+            if pool in idle:
+                idle.discard(pool)
+                push(t, "step", pool)
+
+        for r in sorted(requests, key=lambda r: r.arrive_ms):
+            push(r.arrive_ms, "arrive", r)
+
+        # resize window accumulators
+        win_start = 0.0
+        win_busy = {"heavy": 0.0, "light": 0.0}
+        win_handoffs = 0
+        last_t = 0.0
+
+        def transfer(reqs: List[Request], target: str, t: float):
+            """Move decoding requests between pools: one handoff each."""
+            nonlocal win_handoffs
+            m.handoffs += len(reqs)
+            win_handoffs += len(reqs)
+            active[target].extend(reqs)
+            if reqs:
+                wake(target, t)
+
+        def maybe_resize(t: float):
+            nonlocal win_start, win_handoffs, win_busy
+            window = t - win_start
+            if window < cfg.resize_interval_ms:
+                return
+            busy = win_busy["heavy"] + win_busy["light"]
+            total = sum(n_units.values())
+            sig = LoadSignals(
+                heavy_share=win_busy["heavy"] / busy if busy else 0.0,
+                light_share=win_busy["light"] / busy if busy else 0.0,
+                utilization=busy / (window * total) if total else 0.0,
+                type_changes_per_s=2e3 * win_handoffs / window,
+                heavy_residency=min(
+                    win_busy["heavy"] / window / max(
+                        sum(n_units[p.name] for p in
+                            self.topo.pools_with(WorkKind.HEAVY)), 1),
+                    1.0),
+                window_ms=window)
+            win_start, win_handoffs = t, 0
+            win_busy = {"heavy": 0.0, "light": 0.0}
+            new = self.policy.resize(self.topo, sig)
+            if new is None:
+                return
+            self.topo = new
+            for p in new:
+                n_units[p.name] = p.n_units
+            m.resize_events.append((t, dict(n_units)))
+
+        def charge(pool: str, kind: str, ms: float):
+            m.charge(pool, kind, ms)
+            # resize signals accumulate device-ms, not pool-ms: the work
+            # mix must read the same whatever the current pool split is
+            win_busy[kind] += ms * n_units[pool]
+
+        def step(pool: str, t: float) -> Optional[float]:
+            """Run one scheduling decision; return the pool-free time or
+            None when the pool found nothing to do."""
+            pobj = self.topo.pool(pool)
+            if waiting and policy.eligible(self.topo, pobj, WorkKind.HEAVY):
+                # heavy work waits for this pool: stolen light work leaves
+                # (the paper's IPI preemption of scalar tasks on AVX cores)
+                if active[pool] and policy.on_type_change(
+                        self.topo, pobj,
+                        WorkKind.LIGHT).yield_if_heavy_waiting:
+                    evicted, active[pool] = active[pool], []
+                    target = next((n for n in policy.placement(
+                        self.topo, WorkKind.LIGHT) if n != pool), None)
+                    if target is not None:
+                        transfer(evicted, target, t)
+                    else:
+                        active[pool] = evicted
+                end = t
+                burst = max(1, policy.heavy_burst(self.topo, pobj))
+                for _ in range(burst):
+                    if not waiting:
+                        break
+                    end = self._prefill_chunk(pool, n_units[pool], end,
+                                              waiting, active, m, charge,
+                                              transfer)
+                return end
+            if active[pool]:
+                if pool not in policy.placement(self.topo, WorkKind.LIGHT):
+                    m.steals += 1       # heavy pool running decode batches
+                return self._decode_round(pool, n_units[pool], t, active,
+                                          m, charge)
+            return None
+
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+            if t >= horizon:
                 break
-            while pi < len(pending) and pending[pi].arrive_ms <= t:
-                waiting.append(pending[pi])
-                pi += 1
-            waiting.sort(key=lambda r: r.arrive_ms)
-            name, ndev = pools[p]
-            did = self._pool_step(p, name, ndev, t, waiting, active,
-                                  free_at, m)
-            if not did:
-                # idle: advance to next arrival or other pool event
-                nxt = [f for f in free_at if f > t]
-                cand = [pending[pi].arrive_ms] if pi < len(pending) else []
-                free_at[p] = min(nxt + cand + [horizon_ms])
-        m.total_ms = t
+            last_t = t
+            maybe_resize(t)
+            if kind == "arrive":
+                r: Request = payload
+                r.deadline = r.arrive_ms + cfg.deadline_window_ms
+                heapq.heappush(waiting, (r.deadline, r.rid, r))
+                # wake by policy eligibility, not topology capability: a
+                # permissive policy over a split topology runs prefill
+                # everywhere
+                for p in self.topo.pools:
+                    if policy.eligible(self.topo, p, WorkKind.HEAVY):
+                        wake(p.name, t)
+                continue
+            pool: str = payload
+            free_at = step(pool, t)
+            if free_at is None:
+                idle.add(pool)
+            else:
+                push(free_at, "step", pool)
+
+        m.total_ms = horizon if horizon != float("inf") else last_t
         return m
 
-    # ------------------------------------------------------------ steps
+    # ----------------------------------------------------------- steps
 
-    def _pool_step(self, p: int, name: str, ndev: int, t: float,
-                   waiting: List[Request], active: List[List[Request]],
-                   free_at: List[float], m: ServeMetrics) -> bool:
+    def _prefill_chunk(self, pool: str, ndev: int, t: float, waiting,
+                       active, m: ServeMetrics, charge,
+                       transfer) -> float:
         cfg, model = self.cfg, self.model
-        if name == "prefill":
-            if waiting:
-                # AVX work arrived: scalar tasks leave the AVX core (the
-                # paper's IPI preemption) — migrate local decodes away
-                if active[p]:
-                    for r in active[p]:
-                        m.handoffs += 1
-                    active[1].extend(active[p])
-                    active[p] = []
-                # decode-pool overload keeps the request local (asymmetric
-                # stealing); otherwise hand off after prefill
-                overloaded = len(active[1]) >= cfg.decode_batch_max
-                return self._do_prefill(p, ndev, t, waiting, active,
-                                        free_at, m,
-                                        target_pool=p if overloaded else 1)
-            # idle prefill pool runs decode batches (scalar on AVX core)
-            if active[p]:
-                m.steals += 1
-                return self._do_decode(p, ndev, t, active, free_at, m)
-            return False
-        if name == "decode":
-            # NEVER runs prefill (the paper's invariant)
-            if active[p]:
-                return self._do_decode(p, ndev, t, active, free_at, m)
-            return False
-        # shared pool (no specialization): interleave chunked prefill
-        # between decode iterations — every prefill stalls all decodes
-        if waiting:
-            return self._do_prefill(p, ndev, t, waiting, active, free_at,
-                                    m, target_pool=p)
-        if active[p]:
-            return self._do_decode(p, ndev, t, active, free_at, m)
-        return False
-
-    def _do_prefill(self, p: int, ndev: int, t: float,
-                    waiting: List[Request], active, free_at,
-                    m: ServeMetrics, target_pool: int) -> bool:
-        cfg, model = self.cfg, self.model
-        r = waiting[0]
+        r: Request = waiting[0][2]
         chunk = min(cfg.prefill_chunk, r.prompt_len - r.prefilled)
-        dur = model.prefill_ms(chunk, ndev)
+        if self.executor is not None:
+            dur = self.executor.prefill(r, chunk, pool, ndev)
+        else:
+            dur = model.prefill_ms(chunk, ndev)
         r.prefilled += chunk
         end = t + dur
-        m.prefill_busy_ms += dur
+        charge(pool, "heavy", dur)
         if r.prefilled >= r.prompt_len:
-            waiting.pop(0)
+            heapq.heappop(waiting)
             r.ttft_ms = end - r.arrive_ms
             m.ttft_ms.append(r.ttft_ms)
             r.last_token_ms = end
             r.generated = 1          # prefill emits the first token
-            if cfg.specialization and target_pool != p:
+            homes = self.policy.placement(self.topo, WorkKind.LIGHT)
+            # work conservation: decode where we prefilled whenever this
+            # pool is a placement target at all; otherwise hand off
+            target = pool if pool in homes else homes[0]
+            overloaded = len(active.get(target, ())) >= cfg.decode_batch_max
+            if target == pool or (
+                    overloaded and self.policy.eligible(
+                        self.topo, self.topo.pool(pool), WorkKind.LIGHT)):
+                # asymmetric overload rule: decode locally on the
+                # prefill pool rather than pile onto a saturated target
+                active[pool].append(r)
+            else:
+                # KV handoff: the source pool drives the copy, so the
+                # handoff time extends ITS busy window (one count, one
+                # charge — per actual pool transfer)
                 end += model.handoff_ms
-                m.handoffs += 1
-            active[target_pool].append(r)
-        free_at[p] = end
-        return True
+                charge(pool, "heavy", model.handoff_ms)
+                transfer([r], target, end)
+        return end
 
-    def _do_decode(self, p: int, ndev: int, t: float, active, free_at,
-                   m: ServeMetrics) -> bool:
+    def _decode_round(self, pool: str, ndev: int, t: float, active,
+                      m: ServeMetrics, charge) -> float:
         cfg, model = self.cfg, self.model
-        batch = active[p][:cfg.decode_batch_max]
-        dur = model.decode_ms(len(batch), ndev)
+        batch = active[pool][:cfg.decode_batch_max]
+        if self.executor is not None:
+            dur = self.executor.decode(batch, pool, ndev)
+        else:
+            dur = model.decode_ms(len(batch), ndev)
         end = t + dur
-        m.decode_busy_ms += dur
+        charge(pool, "light", dur)
         still = []
         for r in batch:
             r.generated += 1
@@ -245,9 +354,8 @@ class Engine:
                 m.completed += 1
             else:
                 still.append(r)
-        active[p] = still + active[p][cfg.decode_batch_max:]
-        free_at[p] = end
-        return True
+        active[pool] = still + active[pool][cfg.decode_batch_max:]
+        return end
 
 
 def poisson_workload(rate_per_s: float, duration_ms: float, *,
@@ -269,7 +377,8 @@ def pool_model_from_dryrun(results: dict, arch: str,
 
     step_s is the per-device roofline time on `chips` devices, so one
     chip-second per unit of work is step_s * chips; the engine divides by
-    its own pool size."""
+    its own pool size. Missing or failed dry-run entries fall back to the
+    default PoolModel."""
     pre = results.get(f"{arch}|prefill_32k|{mesh}")
     dec = results.get(f"{arch}|decode_32k|{mesh}")
     if not (pre and dec and pre["status"] == dec["status"] == "ok"):

@@ -1,0 +1,302 @@
+"""Scheduling policy: *what* runs *where* — separated from mechanism.
+
+The paper's contribution is a policy (confine marked-heavy work to a
+core subset, steal asymmetrically, migrate on type change); the OS
+simulator (`core/muqss.py` + `core/simulator.py`) and the serving
+engine (`sched/engine.py`) are mechanisms. A :class:`Policy` answers
+the questions both mechanisms ask:
+
+  * **placement** — on which pools should work of a given kind queue?
+  * **steal eligibility** — may an idle pool execute a kind it is not
+    the placement target for (the asymmetric rule: the heavy pool may
+    run light work, never the reverse)?
+  * **queue order / penalty** — in what order does a pool scan its
+    queues, and with what deadline penalty (the MuQSS idle-priority
+    trick, §3.2)?
+  * **preemption on type change** — when work changes kind (the
+    ``with_avx``/``without_avx`` syscalls; prefill→decode in serving),
+    must it migrate, and should a lower-class occupant of the target
+    pool be preempted via IPI?
+  * **resizing** — given observed load, should the topology change
+    (the §4.3 adaptive policy, previously wired to nothing)?
+
+Mechanisms consume the subset they need: the MuQSS scheduler uses
+``queue_order``/``penalty``/``placement``/``on_type_change``; the
+event-driven serving engine uses ``eligible``/``placement``/
+``on_type_change``/``heavy_burst``/``resize``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.core.adaptive import AdaptiveConfig
+from repro.core.adaptive import AdaptivePolicy as AdaptiveEstimator
+from repro.sched.topology import Pool, Topology, WorkKind
+
+# Deadline penalty added to light work on dedicated heavy pools — the
+# same large-constant trick MuQSS uses for idle-priority tasks.
+LIGHT_PENALTY = 1e12
+
+
+@dataclass(frozen=True)
+class TypeChangeDecision:
+    """Policy verdict when work changes kind while placed on ``pool``.
+
+    migrate — the work must leave its current pool (requeue);
+    preempt — a heavy-pool unit currently running light work should be
+        preempted (IPI) so it can pick up the newly-heavy work;
+    yield_if_heavy_waiting — keep running, but give the unit back if
+        heavy work is queued for this pool (the asymmetric-steal exit).
+    """
+    migrate: bool = False
+    preempt: bool = False
+    yield_if_heavy_waiting: bool = False
+
+
+@dataclass
+class LoadSignals:
+    """Windowed observations a mechanism feeds to ``Policy.resize``."""
+    heavy_share: float = 0.0          # heavy busy-time / total busy-time
+    light_share: float = 0.0
+    utilization: float = 0.0          # busy-time / (wall * n_units)
+    type_changes_per_s: float = 0.0
+    heavy_residency: float = 0.0      # wall-clock fraction heavy is live
+    window_ms: float = 0.0
+
+
+class Policy:
+    """Base policy: shared/no-specialization behaviour (safe defaults).
+
+    Subclasses override the decisions they change; every method is total
+    so a custom policy only has to implement what it cares about.
+    """
+
+    name = "base"
+
+    # ------------------------------------------------------- placement
+
+    def placement(self, topo: Topology, kind: WorkKind) -> Tuple[str, ...]:
+        """Pool names where `kind` work should queue, preferred first."""
+        pools = topo.pools_with(kind) or topo.pools
+        return tuple(p.name for p in pools)
+
+    def eligible(self, topo: Topology, pool: Pool, kind: WorkKind) -> bool:
+        """May `pool` *execute* `kind` (placement target or steal)?"""
+        return pool.can(kind)
+
+    # ----------------------------------------------------- queue scans
+
+    def queue_order(self, topo: Topology, pool: Pool
+                    ) -> Tuple[WorkKind, ...]:
+        """Order in which `pool` scans kind-queues (first wins ties)."""
+        return (WorkKind.LIGHT, WorkKind.HEAVY, WorkKind.ANY)
+
+    def penalty(self, topo: Topology, pool: Pool) -> Dict[WorkKind, float]:
+        """Deadline penalty per kind when `pool` compares queued work."""
+        return {}
+
+    # ----------------------------------------------------- transitions
+
+    def on_type_change(self, topo: Topology, pool: Optional[Pool],
+                       new_kind: WorkKind) -> TypeChangeDecision:
+        return TypeChangeDecision()
+
+    def heavy_burst(self, topo: Topology, pool: Pool) -> int:
+        """How many heavy items a pool may run back-to-back before
+        reconsidering light work (cohort scheduling batches >1)."""
+        return 1
+
+    # -------------------------------------------------------- resizing
+
+    def resize(self, topo: Topology, signals: LoadSignals
+               ) -> Optional[Topology]:
+        """Return a replacement topology, or None to keep the current."""
+        return None
+
+
+class SharedBaselinePolicy(Policy):
+    """No specialization: every pool runs everything, EDF order, no
+    penalties, no forced migrations — plain MuQSS / vLLM-style
+    continuous batching with interleaved chunked prefill."""
+
+    name = "shared"
+
+    def eligible(self, topo: Topology, pool: Pool, kind: WorkKind) -> bool:
+        return True
+
+    def placement(self, topo: Topology, kind: WorkKind) -> Tuple[str, ...]:
+        return topo.names
+
+
+class SpecializedPolicy(Policy):
+    """The paper's core-specialization policy (§3.1–3.2).
+
+    * heavy work queues only on heavy-capable pools; light/untyped work
+      queues on the others (falling back to everywhere);
+    * the heavy pool may run light work when idle (asymmetric steal,
+      work conservation) but deprioritizes it by a large deadline
+      penalty; light pools never run heavy work;
+    * work turning heavy on a light pool migrates immediately, and a
+      heavy-pool unit running stolen light work is preempted (IPI);
+    * work turning light on the heavy pool keeps running unless heavy
+      work is waiting.
+    """
+
+    name = "specialized"
+
+    def _dedicated(self, topo: Topology, pool: Pool) -> bool:
+        """Is `pool` a heavy pool in a topology that actually splits?"""
+        return pool.can(WorkKind.HEAVY) \
+            and len(topo.pools_with(WorkKind.HEAVY)) < len(topo.pools)
+
+    def placement(self, topo: Topology, kind: WorkKind) -> Tuple[str, ...]:
+        if kind == WorkKind.HEAVY:
+            pools = topo.pools_with(WorkKind.HEAVY) or topo.pools
+        else:
+            light = tuple(p for p in topo.pools
+                          if not self._dedicated(topo, p))
+            pools = light or topo.pools
+        return tuple(p.name for p in pools)
+
+    def eligible(self, topo: Topology, pool: Pool, kind: WorkKind) -> bool:
+        if kind == WorkKind.HEAVY:
+            return pool.can(WorkKind.HEAVY)
+        return True                     # asymmetric: heavy pool steals light
+
+    def queue_order(self, topo: Topology, pool: Pool
+                    ) -> Tuple[WorkKind, ...]:
+        if self._dedicated(topo, pool):
+            return (WorkKind.HEAVY, WorkKind.ANY, WorkKind.LIGHT)
+        if pool.can(WorkKind.HEAVY):    # shared topology: plain order
+            return (WorkKind.LIGHT, WorkKind.HEAVY, WorkKind.ANY)
+        return (WorkKind.LIGHT, WorkKind.ANY)
+
+    def penalty(self, topo: Topology, pool: Pool) -> Dict[WorkKind, float]:
+        if self._dedicated(topo, pool):
+            return {WorkKind.LIGHT: LIGHT_PENALTY}
+        return {}
+
+    def on_type_change(self, topo: Topology, pool: Optional[Pool],
+                       new_kind: WorkKind) -> TypeChangeDecision:
+        if pool is None:
+            return TypeChangeDecision()
+        if new_kind == WorkKind.HEAVY and not pool.can(WorkKind.HEAVY):
+            return TypeChangeDecision(migrate=True, preempt=True)
+        if new_kind == WorkKind.LIGHT and self._dedicated(topo, pool):
+            return TypeChangeDecision(yield_if_heavy_waiting=True)
+        return TypeChangeDecision()
+
+
+class CohortPolicy(SharedBaselinePolicy):
+    """Cohort scheduling (paper §5 comparison): no pool split, but heavy
+    sections are batched back-to-back so frequency transitions (or, in
+    serving, prefill/decode alternations) amortize over ``batch_n``
+    items. Helps less than specialization — every unit still
+    periodically runs heavy work — which is exactly the comparison the
+    paper draws."""
+
+    name = "cohort"
+
+    def __init__(self, batch_n: int = 8):
+        self.batch_n = batch_n
+
+    def heavy_burst(self, topo: Topology, pool: Pool) -> int:
+        return self.batch_n
+
+
+@dataclass
+class _ResizeState:
+    proposal: Optional[int] = None      # pending size change
+    streak: int = 0                     # consecutive windows proposing it
+    ema_heavy: Optional[float] = None   # smoothed heavy work share
+
+
+class AdaptivePolicy(Policy):
+    """§4.3 adaptive specialization, wrapping the
+    :class:`repro.core.adaptive.AdaptivePolicy` estimator (previously
+    wired to nothing).
+
+    Scheduling behaviour delegates to an inner :class:`SpecializedPolicy`;
+    ``resize`` sizes the heavy pool from the observed heavy share via the
+    estimator's §2.1 rule, with two anti-flap measures: the share is
+    EMA-smoothed over windows (windowed Poisson arrivals are bursty),
+    and a new size is applied only when proposed in two consecutive
+    windows (debounce).
+    """
+
+    name = "adaptive"
+
+    def __init__(self, cfg: Optional[AdaptiveConfig] = None,
+                 inner: Optional[Policy] = None, ema_alpha: float = 0.3):
+        self.cfg = cfg or AdaptiveConfig()
+        self.inner = inner or SpecializedPolicy()
+        self.ema_alpha = ema_alpha
+        self._resize = _ResizeState()
+        self._estimator: Optional[AdaptiveEstimator] = None
+
+    # behaviour delegates to the inner policy ---------------------------
+    def placement(self, topo, kind):
+        return self.inner.placement(topo, kind)
+
+    def eligible(self, topo, pool, kind):
+        return self.inner.eligible(topo, pool, kind)
+
+    def queue_order(self, topo, pool):
+        return self.inner.queue_order(topo, pool)
+
+    def penalty(self, topo, pool):
+        return self.inner.penalty(topo, pool)
+
+    def on_type_change(self, topo, pool, new_kind):
+        return self.inner.on_type_change(topo, pool, new_kind)
+
+    # resizing ----------------------------------------------------------
+    def _heavy_pool(self, topo: Topology) -> Optional[Pool]:
+        dedicated = [p for p in topo.pools if p.can(WorkKind.HEAVY)
+                     and len(topo.pools_with(WorkKind.HEAVY))
+                     < len(topo.pools)]
+        return dedicated[0] if dedicated else None
+
+    def resize(self, topo: Topology, signals: LoadSignals
+               ) -> Optional[Topology]:
+        heavy = self._heavy_pool(topo)
+        if heavy is None or len(topo.pools) != 2:
+            return None
+        st = self._resize
+        if st.ema_heavy is None:
+            st.ema_heavy = signals.heavy_share
+        else:
+            st.ema_heavy += self.ema_alpha * (signals.heavy_share
+                                              - st.ema_heavy)
+        n_units = topo.n_units
+        if self._estimator is None or self._estimator.n_cores != n_units:
+            self._estimator = AdaptiveEstimator(self.cfg, n_units)
+        est = self._estimator
+        est.state.n_avx_cores = heavy.n_units
+        state = est.update(scalar_share=signals.light_share,
+                           heavy_share=st.ema_heavy,
+                           l2_residency=signals.heavy_residency,
+                           type_changes_per_s=signals.type_changes_per_s)
+        if not state.enabled:
+            # §4.3: cost exceeds benefit — fall back toward the minimal
+            # pool (a two-pool topology cannot be unsplit in place)
+            want = self.cfg.min_avx_cores
+        else:
+            want = state.n_avx_cores
+        want = max(1, min(want, n_units - 1))
+        if want == heavy.n_units:
+            st.proposal, st.streak = None, 0
+            return None
+        if st.proposal != want:
+            st.proposal, st.streak = want, 1
+            return None
+        st.streak += 1
+        # dead-band against flapping on a size boundary: a >=2-unit
+        # mismatch applies after the 2-window debounce; a 1-unit drift
+        # must persist for 4 consecutive windows
+        needed = 2 if abs(want - heavy.n_units) >= 2 else 4
+        if st.streak < needed:
+            return None
+        st.proposal, st.streak = None, 0
+        return topo.resized(heavy.name, want)

@@ -14,12 +14,11 @@
 from __future__ import annotations
 
 import signal
-import time
 from typing import Callable, Optional
 
 import jax
 
-from repro.dist.context import DistContext, make_dist
+from repro.dist.context import DistContext
 from repro.dist.sharding import tree_shardings
 from repro.train.checkpoint import CheckpointManager
 

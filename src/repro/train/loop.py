@@ -4,16 +4,13 @@ train state, metrics. The returned step is what the dry-run lowers for
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.context import DistContext, no_dist
-from repro.dist.sharding import sanitize_specs, tree_shardings
+from repro.dist.sharding import tree_shardings
 from repro.models.api import Model
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
 

@@ -1,7 +1,5 @@
 """Checkpoint manager: atomic roundtrip, keep-N GC, crash recovery,
 resume determinism."""
-import json
-import os
 from pathlib import Path
 
 import jax

@@ -1,7 +1,6 @@
 """Data pipeline: determinism, disjoint host shards, exact resume,
 elastic re-partition."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, DataState, Pipeline

@@ -4,13 +4,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive import AdaptiveConfig, AdaptivePolicy
-from repro.core.experiments import run_webserver
-from repro.core.license import LicenseConfig
 from repro.core.muqss import SchedConfig
-from repro.core.perfcounters import CounterReport, collect, cross_check
+from repro.core.perfcounters import CounterReport, cross_check
 from repro.core.simulator import Simulator
 from repro.core.static_analysis import analyze_jaxpr, rank_functions, report
-from repro.core.task import IClass, Segment, Task, TaskType
 from repro.core.workloads import WebConfig, webserver_tasks
 
 

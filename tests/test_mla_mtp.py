@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.dist.context import no_dist
 from repro.models import attention as attn
 from repro.models import transformer
 

@@ -7,13 +7,11 @@
         deadline order (they share the no-penalty class);
   INV4  every runnable task is eventually picked (work conservation).
 """
-import itertools
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.muqss import SchedConfig, Scheduler
-from repro.core.task import Segment, Task, TaskType
+from repro.core.task import Task, TaskType
 
 
 def mk_task(ttype):

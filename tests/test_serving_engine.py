@@ -1,11 +1,12 @@
 """Device-pool specialization for serving (the TPU adaptation, DESIGN.md
-§2.2): interference and its mitigation, asymmetric-rule invariants."""
+§2.2): interference and its mitigation, asymmetric-rule invariants —
+through the repro.sched Policy/Topology API."""
 import copy
 
-import numpy as np
 import pytest
 
-from repro.sched.engine import (Engine, PoolModel, Request, ServeConfig,
+from repro.sched import SharedBaselinePolicy, SpecializedPolicy, Topology
+from repro.sched.engine import (Engine, PoolModel, ServeConfig,
                                 poisson_workload)
 
 PM = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
@@ -13,9 +14,11 @@ PM = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
 
 
 def _run(spec, wl, n_dev=16, pre_dev=4, horizon=60_000.0):
-    eng = Engine(ServeConfig(n_devices=n_dev, prefill_devices=pre_dev,
-                             specialization=spec), PM)
-    return eng.run(copy.deepcopy(wl), horizon)
+    if spec:
+        topo, pol = Topology.serving(n_dev, pre_dev), SpecializedPolicy()
+    else:
+        topo, pol = Topology.shared(n_dev), SharedBaselinePolicy()
+    return Engine(topo, pol, PM).run(copy.deepcopy(wl), horizon)
 
 
 @pytest.fixture(scope="module")
@@ -39,10 +42,10 @@ def test_handoffs_happen_only_with_specialization(workload):
 
 
 def test_decode_pool_never_prefills(workload):
-    """With specialization the decode pool accumulates zero prefill time:
-    all prefill busy-ms happen before any decode-pool activity for each
-    request (TTFT >= pure prefill service time)."""
+    """With specialization the decode pool accumulates zero prefill
+    (heavy) busy time, and TTFT >= pure prefill service time."""
     m = _run(True, workload)
+    assert m.pool_busy["decode"]["heavy"] == 0.0
     min_prefill_ms = PM.prefill_ms(1024, 4)   # smallest possible prompt
     assert min(m.ttft_ms) >= min_prefill_ms * 0.99
 
@@ -57,7 +60,35 @@ def test_overload_keeps_requests_on_prefill_pool():
     """Asymmetric stealing: when the decode pool saturates but prefill has
     idle gaps, freshly prefilled requests decode on the prefill pool."""
     wl = poisson_workload(4.0, 20_000, prompt_len=512, max_new=512, seed=1)
-    eng = Engine(ServeConfig(n_devices=8, prefill_devices=2,
-                             specialization=True, decode_batch_max=16), PM)
+    eng = Engine(Topology.serving(8, 2), SpecializedPolicy(), PM,
+                 ServeConfig(decode_batch_max=16))
     m = eng.run(wl, 20_000)
     assert m.steals > 0
+
+
+def test_handoffs_counted_once_per_transfer(workload):
+    """Every handoff is one actual pool transfer: with no overload (large
+    decode_batch_max) each completed-or-inflight prefill hands off exactly
+    once, so handoffs == number of requests that finished prefill."""
+    m = _run(True, workload)
+    assert m.handoffs == len(m.ttft_ms)
+
+
+def test_edf_deadlines_assigned_and_ordered():
+    """The engine schedules EDF by arrive_ms + deadline_window_ms (the
+    MuQSS virtual-deadline analogue), not bare FIFO: every admitted
+    request carries its deadline, and first tokens are produced in
+    deadline order when the window is uniform."""
+    cfg = ServeConfig(deadline_window_ms=50.0)
+    reqs = poisson_workload(2.0, 10_000, prompt_len=1024, max_new=4, seed=7)
+    m = Engine(Topology.serving(4, 2), SpecializedPolicy(), PM, cfg).run(
+        reqs, 60_000)
+    assert m.completed > 0
+    admitted = [r for r in reqs if r.deadline > 0]
+    assert admitted
+    for r in admitted:
+        assert r.deadline == pytest.approx(r.arrive_ms + 50.0)
+    finished = [r for r in admitted if r.ttft_ms is not None]
+    by_deadline = sorted(finished, key=lambda r: r.deadline)
+    ttfts = [r.arrive_ms + r.ttft_ms for r in by_deadline]
+    assert ttfts == sorted(ttfts)
