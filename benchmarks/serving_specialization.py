@@ -20,27 +20,36 @@ from pathlib import Path
 
 from repro.sched import SharedBaselinePolicy, SpecializedPolicy, Topology
 from repro.sched.engine import (Engine, PoolModel, ServeConfig,
-                                pool_model_from_dryrun, poisson_workload)
+                                pool_model_from_dryrun)
+from repro.sched.replay import headline_metrics
+from repro.sched.workload import poisson_workload, scenario_trace
 
 DRYRUN = Path("results/dryrun.json")
 
 
 def run(arch: str = "codeqwen1.5-7b", n_devices: int = 16,
         prefill_devices: int = 4, duration_ms: float = 60_000.0,
-        util: float = 0.5, seed: int = 3):
+        util: float = 0.5, seed: int = 3, scenario: str = None):
     if DRYRUN.exists():
         pm = pool_model_from_dryrun(json.loads(DRYRUN.read_text()), arch)
     else:
         pm = PoolModel(prefill_ms_per_ktok=326.0, decode_fixed_ms=757.0,
                        decode_ms_per_seq=23.6)
-    # auto-calibrate arrival rate to `util` of decode capacity
-    dec_dev = n_devices - prefill_devices
-    itl_ms = pm.decode_ms(64, dec_dev)
-    tok_per_s = 64 * 1000.0 / itl_ms
-    max_new = 64
-    rate = util * tok_per_s / max_new
-    wl = poisson_workload(rate, duration_ms, prompt_len=2048,
-                         max_new=max_new, seed=seed)
+    if scenario is not None:
+        # one scenario trace from the workload subsystem, replayed
+        # identically under both setups
+        wl = scenario_trace(scenario, duration_ms=duration_ms,
+                            seed=seed).to_engine_requests()
+        rate = len(wl) * 1000.0 / duration_ms
+    else:
+        # default: auto-calibrate arrival rate to `util` of decode capacity
+        dec_dev = n_devices - prefill_devices
+        itl_ms = pm.decode_ms(64, dec_dev)
+        tok_per_s = 64 * 1000.0 / itl_ms
+        max_new = 64
+        rate = util * tok_per_s / max_new
+        wl = poisson_workload(rate, duration_ms, prompt_len=2048,
+                              max_new=max_new, seed=seed)
     cfg = ServeConfig(prefill_chunk=2048, decode_batch_max=256)
     setups = {
         "nospec": (Topology.shared(n_devices), SharedBaselinePolicy()),
@@ -54,20 +63,17 @@ def run(arch: str = "codeqwen1.5-7b", n_devices: int = 16,
         out[key] = m.summary()
     ns, sp = out["nospec"], out["spec"]
     if ns["itl_p99_ms"] > 0:
-        # the paper's metric: performance VARIABILITY (tail spread)
-        spread_ns = ns["itl_p99_ms"] - ns["itl_p50_ms"]
-        spread_sp = sp["itl_p99_ms"] - sp["itl_p50_ms"]
-        out["itl_variability_reduction"] = \
-            1 - spread_sp / max(spread_ns, 1e-9)
-        out["itl_p99_reduction"] = 1 - sp["itl_p99_ms"] / ns["itl_p99_ms"]
+        # the paper's metric: performance VARIABILITY (tail spread) —
+        # one shared definition with the scenario-matrix harness
+        out.update(headline_metrics(ns, sp))
     out["arch"] = arch
     out["rate_req_s"] = rate
     return out
 
 
-def rows(duration_ms: float = 60_000.0):
+def rows(duration_ms: float = 60_000.0, scenario: str = None):
     t0 = time.time()
-    res = run(duration_ms=duration_ms)
+    res = run(duration_ms=duration_ms, scenario=scenario)
     wall = (time.time() - t0) * 1e6 / 2
     out = []
     for k in ("nospec", "spec"):
@@ -90,12 +96,15 @@ def main(argv=None):
                     help="short run (CI regression gate): asserts the "
                          "specialized engine still cuts the ITL tail "
                          "spread vs the shared baseline")
+    ap.add_argument("--scenario", default=None,
+                    help="replay a registered workload scenario "
+                         "(repro.sched.workload.SCENARIOS) instead of "
+                         "the calibrated Poisson default")
     args = ap.parse_args(argv)
     if args.smoke:
-        res = run(duration_ms=20_000.0)
-        spread_ns = (res["nospec"]["itl_p99_ms"]
-                     - res["nospec"]["itl_p50_ms"])
-        spread_sp = res["spec"]["itl_p99_ms"] - res["spec"]["itl_p50_ms"]
+        res = run(duration_ms=20_000.0, scenario=args.scenario)
+        spread_ns = res["itl_spread_shared_ms"]
+        spread_sp = res["itl_spread_specialized_ms"]
         print(f"smoke: spread nospec={spread_ns:.1f}ms "
               f"spec={spread_sp:.1f}ms "
               f"variability_reduction="
@@ -105,7 +114,7 @@ def main(argv=None):
         assert spread_sp < spread_ns, (spread_sp, spread_ns)
         print("smoke: OK")
         return
-    for r in rows():
+    for r in rows(scenario=args.scenario):
         print(",".join(str(x) for x in r))
 
 

@@ -130,6 +130,41 @@ def cohort_comparison(sim_us: float = 1_000_000.0) -> Dict[str, float]:
             "drop_spec": 1 - spec / base}
 
 
+def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
+                  n_avx: int = 4, policy: Optional[Policy] = None,
+                  isa: str = "avx512", slack_us: float = 20_000.0) -> Dict:
+    """Replay a serving trace (repro.sched.workload) through the OS
+    simulator — the second mechanism of the differential replay harness.
+    Arrival times are time-compressed (1 trace-ms == 1 sim-µs, see
+    core/workloads.trace_tasks); the run extends ``slack_us`` past the
+    last arrival so admitted requests can drain."""
+    from repro.core.workloads import trace_tasks
+    scfg = SchedConfig(n_cores=n_cores,
+                       n_avx_cores=n_avx if specialization else 0,
+                       specialization=specialization)
+    topo = Topology.cores(n_cores, n_avx if specialization else 0)
+    pol = policy or (SpecializedPolicy() if specialization
+                     else SharedBaselinePolicy())
+    sim = Simulator(scfg, LicenseConfig(), topology=topo, policy=pol)
+    tasks = trace_tasks(trace, isa=isa)
+    for task, at in tasks:
+        sim.add_task(task, at)
+    until = max((at for _, at in tasks), default=0.0) + slack_us
+    m = sim.run(until)
+    c = sim.counters()
+    return {
+        "mechanism": "simulator",
+        "policy": pol.name,
+        "n_requests": len(tasks),
+        "completed": m.completed,
+        "latency_p50_us": m.p(0.50),
+        "latency_p99_us": m.p(0.99),
+        "avg_freq_ghz": sim.avg_frequency_ghz(),
+        "migrations": c["migrations"],
+        "type_changes": c["type_changes"],
+    }
+
+
 def fig7_overhead(rates_hint: Optional[List[float]] = None,
                   sim_us: float = 1_000_000.0) -> List[Dict]:
     """Fig. 7: overhead vs task-type-change rate. Loop length is swept;

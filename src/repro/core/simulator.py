@@ -54,6 +54,15 @@ class Metrics:
         xs = sorted(self.latencies_us)
         return xs[min(int(q * len(xs)), len(xs) - 1)]
 
+    def latencies_by_task(self) -> Dict[str, List[float]]:
+        """Per-task-name request latencies. Trace replays name tasks
+        ``tenant:rid`` (core/workloads.trace_tasks), so grouping on the
+        prefix gives per-tenant latency distributions."""
+        out: Dict[str, List[float]] = {}
+        for _t, lat, name in self.completions:
+            out.setdefault(name, []).append(lat)
+        return out
+
 
 class Simulator:
     def __init__(self, sched_cfg: SchedConfig,

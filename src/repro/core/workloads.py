@@ -144,6 +144,43 @@ def crypto_microbench(isa: str, section_bytes: int = 1 << 16
         yield RequestDone()
 
 
+# ------------------------------------------------ serving-trace replay
+
+# Time compression for replaying serving traces (repro.sched.workload)
+# through the OS simulator: 1 trace-ms maps to 1 sim-µs, and per-token
+# cycle costs are scaled so the heavy/light duty cycle matches the
+# serving engine's prefill/decode ratio. The differential replay
+# harness uses this to drive the *same* trace through both mechanisms.
+TRACE_PREFILL_CYCLES_PER_TOK = 205.0   # ~150 sim-µs per 2k-tok prefill
+TRACE_DECODE_CYCLES_PER_TOK = 6_000.0  # ~2 sim-µs per generated token
+
+
+def _trace_request(prompt_len: int, max_new: int, isa: str
+                   ) -> Iterator[object]:
+    """One serving request as an OS-simulator task body: an annotated
+    heavy (AVX-analogue) prefill section, then light decode segments."""
+    icl = ICLASS_OF_ISA[isa]
+    yield TypeChange(TaskType.AVX)
+    yield Segment(prompt_len * TRACE_PREFILL_CYCLES_PER_TOK, icl,
+                  dense=True, stack=("serve", "prefill"))
+    yield TypeChange(TaskType.SCALAR)
+    for _ in range(max_new):
+        yield Segment(TRACE_DECODE_CYCLES_PER_TOK, IClass.SCALAR,
+                      stack=("serve", "decode"))
+    yield RequestDone()
+
+
+def trace_tasks(trace, isa: str = "avx512"):
+    """Convert a serving trace (``repro.sched.workload.Trace`` or any
+    object with ``.requests`` carrying rid/arrive_ms/prompt_len/max_new/
+    tenant) into ``[(Task, arrive_us)]`` for ``Simulator.add_task``.
+    Task names are ``tenant:rid`` so per-tenant latencies group."""
+    return [(Task(_trace_request(r.prompt_len, r.max_new, isa),
+                  ttype=TaskType.SCALAR, name=f"{r.tenant}:{r.rid}"),
+             r.arrive_ms)          # 1 trace-ms == 1 sim-µs
+            for r in trace.requests]
+
+
 # ---------------------------------------------------- Fig. 7 microbench
 
 

@@ -27,6 +27,7 @@ from repro.dist.context import no_dist
 from repro.models.api import build_model
 from repro.sched import SpecializedPolicy, Topology
 from repro.sched.engine import Engine, Request, ServeConfig
+from repro.sched.workload import load_trace
 
 
 class RealModelExecutor:
@@ -124,9 +125,23 @@ def run_engine(args, cfg, model, params):
     policy = SpecializedPolicy()
     ex = RealModelExecutor(model, params, cfg.vocab, P, max_seq,
                            seed=args.seed)
-    interval_ms = 1000.0 / args.rate
-    reqs = [Request(rid=i, arrive_ms=i * interval_ms, prompt_len=P,
-                    max_new=N) for i in range(args.requests)]
+    if args.workload:
+        # scenario name or JSON trace path (repro.sched.workload): the
+        # trace supplies arrival times, tenants and per-tenant deadline
+        # windows; token counts are clamped to the jitted model's fixed
+        # prompt/max-new dims (the real executor runs whole prompts)
+        trace = load_trace(args.workload, seed=args.seed)
+        reqs = [Request(rid=r.rid, arrive_ms=r.arrive_ms, prompt_len=P,
+                        max_new=N, tenant=r.tenant,
+                        deadline_window_ms=r.deadline_window_ms)
+                for r in trace.requests[:args.requests]]
+        print(f"[serve] workload {args.workload!r}: "
+              f"{len(reqs)} requests replayed "
+              f"(of {len(trace.requests)} in the trace)")
+    else:
+        interval_ms = 1000.0 / args.rate
+        reqs = [Request(rid=i, arrive_ms=i * interval_ms, prompt_len=P,
+                        max_new=N) for i in range(args.requests)]
     eng = Engine(topo, policy,
                  cfg=ServeConfig(prefill_chunk=P,
                                  decode_batch_max=args.batch),
@@ -136,7 +151,7 @@ def run_engine(args, cfg, model, params):
     wall = time.time() - t0
     s = m.summary()
     total_tokens = m.completed * N
-    print(f"[serve] {m.completed}/{args.requests} requests, "
+    print(f"[serve] {m.completed}/{len(reqs)} requests, "
           f"{total_tokens} tokens in {wall:.1f}s wall")
     print(f"[serve] ttft_p50={s['ttft_p50_ms']:.1f}ms "
           f"ttft_p99={s['ttft_p99_ms']:.1f}ms "
@@ -203,6 +218,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="request arrival rate (req/s of engine time)")
+    ap.add_argument("--workload", default=None,
+                    help="arrival pattern: a registered scenario name "
+                         "(steady, bursty, diurnal, heavy_tail, "
+                         "multi_tenant) or a path to a JSON trace; "
+                         "default: fixed-interval arrivals at --rate")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

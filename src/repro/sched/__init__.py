@@ -1,14 +1,25 @@
 """Shared scheduling API: Topology (mechanism-agnostic pool layout),
-Policy (placement / stealing / preemption / resizing decisions), and the
-event-driven serving engine. `core/muqss.py` (OS simulator) and
-`sched/engine.py` (serving) both consume this API."""
-from repro.sched.policy import (AdaptivePolicy, CohortPolicy, LoadSignals,
-                                Policy, SharedBaselinePolicy,
-                                SpecializedPolicy, TypeChangeDecision)
+Policy (placement / stealing / preemption / resizing decisions), the
+event-driven serving engine, and the scenario workload subsystem.
+`core/muqss.py` (OS simulator) and `sched/engine.py` (serving) both
+consume this API; `sched/workload.py` generates seeded, JSON-replayable
+traces and `sched/replay.py` replays one trace differentially through
+every registered policy and both mechanisms."""
+from repro.sched.policy import (POLICIES, AdaptivePolicy, CohortPolicy,
+                                LoadSignals, Policy, SharedBaselinePolicy,
+                                SpecializedPolicy, TypeChangeDecision,
+                                make_policy, register_policy,
+                                registered_policies)
 from repro.sched.topology import Pool, Topology, WorkKind
+from repro.sched.workload import (SCENARIOS, Tenant, Trace, WorkloadSpec,
+                                  poisson_workload, register_scenario,
+                                  scenario_spec, scenario_trace)
 
 __all__ = [
-    "AdaptivePolicy", "CohortPolicy", "LoadSignals", "Policy", "Pool",
-    "SharedBaselinePolicy", "SpecializedPolicy", "Topology",
-    "TypeChangeDecision", "WorkKind",
+    "AdaptivePolicy", "CohortPolicy", "LoadSignals", "POLICIES", "Policy",
+    "Pool", "SCENARIOS", "SharedBaselinePolicy", "SpecializedPolicy",
+    "Tenant", "Topology", "Trace", "TypeChangeDecision", "WorkKind",
+    "WorkloadSpec", "make_policy", "poisson_workload", "register_policy",
+    "register_scenario", "registered_policies", "scenario_spec",
+    "scenario_trace",
 ]

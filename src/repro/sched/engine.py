@@ -30,8 +30,6 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.sched.policy import LoadSignals, Policy
 from repro.sched.topology import Topology, WorkKind
 
@@ -42,6 +40,10 @@ class Request:
     arrive_ms: float
     prompt_len: int
     max_new: int
+    # SLO class (repro.sched.workload): a per-request deadline window
+    # overrides ServeConfig.deadline_window_ms in the EDF order
+    tenant: str = "default"
+    deadline_window_ms: Optional[float] = None
     # progress
     prefilled: int = 0
     generated: int = 0
@@ -154,13 +156,22 @@ class Engine:
         self.model = model or PoolModel()
         self.cfg = cfg or ServeConfig()
         self.executor = executor
+        self.oracle = None              # set per run()
 
     # ------------------------------------------------------------- run
 
     def run(self, requests: List[Request],
-            horizon_ms: Optional[float] = None) -> ServeMetrics:
+            horizon_ms: Optional[float] = None,
+            oracle: Optional[object] = None) -> ServeMetrics:
+        """Replay ``requests``; an optional ``oracle`` (duck-typed, see
+        ``repro.sched.replay.EngineOracle``) observes every scheduling
+        event and checks engine invariants — EDF order, one handoff per
+        pool transfer, work conservation, capability respect."""
         cfg, policy = self.cfg, self.policy
         self.topo = self._topo0         # resizes do not leak across runs
+        self.oracle = orc = oracle
+        if orc is not None:
+            orc.bind(self)
         m = ServeMetrics()
         horizon = float("inf") if horizon_ms is None else horizon_ms
         n_units: Dict[str, int] = {p.name: p.n_units for p in self.topo}
@@ -189,14 +200,23 @@ class Engine:
         win_handoffs = 0
         last_t = 0.0
 
-        def transfer(reqs: List[Request], target: str, t: float):
-            """Move decoding requests between pools: one handoff each."""
+        def transfer(reqs: List[Request], src: str, target: str, t: float):
+            """Move decoding requests between pools: one handoff each.
+
+            Delivery is an event at ``t`` (the handoff completion time),
+            not an immediate list append: a busy target pool must not
+            see — and decode — a request before its prefill+handoff has
+            finished in simulated time. (The immediate-append version
+            produced negative inter-token latencies; the replay oracle's
+            monotonicity check caught it.)"""
             nonlocal win_handoffs
+            if not reqs:
+                return
+            if orc is not None:
+                orc.on_transfer(t, reqs, src, target)
             m.handoffs += len(reqs)
             win_handoffs += len(reqs)
-            active[target].extend(reqs)
-            if reqs:
-                wake(target, t)
+            push(t, "deliver", (target, list(reqs)))
 
         def maybe_resize(t: float):
             nonlocal win_start, win_handoffs, win_busy
@@ -246,7 +266,7 @@ class Engine:
                     target = next((n for n in policy.placement(
                         self.topo, WorkKind.LIGHT) if n != pool), None)
                     if target is not None:
-                        transfer(evicted, target, t)
+                        transfer(evicted, pool, target, t)
                     else:
                         active[pool] = evicted
                 end = t
@@ -273,7 +293,11 @@ class Engine:
             maybe_resize(t)
             if kind == "arrive":
                 r: Request = payload
-                r.deadline = r.arrive_ms + cfg.deadline_window_ms
+                window = cfg.deadline_window_ms \
+                    if r.deadline_window_ms is None else r.deadline_window_ms
+                r.deadline = r.arrive_ms + window
+                if orc is not None:
+                    orc.on_arrive(t, r)
                 heapq.heappush(waiting, (r.deadline, r.rid, r))
                 # wake by policy eligibility, not topology capability: a
                 # permissive policy over a split topology runs prefill
@@ -282,14 +306,23 @@ class Engine:
                     if policy.eligible(self.topo, p, WorkKind.HEAVY):
                         wake(p.name, t)
                 continue
+            if kind == "deliver":
+                target, reqs = payload
+                active[target].extend(reqs)
+                wake(target, t)
+                continue
             pool: str = payload
             free_at = step(pool, t)
             if free_at is None:
+                if orc is not None:
+                    orc.on_idle(t, pool, len(waiting), len(active[pool]))
                 idle.add(pool)
             else:
                 push(free_at, "step", pool)
 
         m.total_ms = horizon if horizon != float("inf") else last_t
+        if orc is not None:
+            orc.on_end(m)
         return m
 
     # ----------------------------------------------------------- steps
@@ -299,6 +332,8 @@ class Engine:
                        transfer) -> float:
         cfg, model = self.cfg, self.model
         r: Request = waiting[0][2]
+        if self.oracle is not None:
+            self.oracle.on_prefill(t, pool, r, waiting)
         chunk = min(cfg.prefill_chunk, r.prompt_len - r.prefilled)
         if self.executor is not None:
             dur = self.executor.prefill(r, chunk, pool, ndev)
@@ -330,7 +365,7 @@ class Engine:
                 # charge — per actual pool transfer)
                 end += model.handoff_ms
                 charge(pool, "heavy", model.handoff_ms)
-                transfer([r], target, end)
+                transfer([r], pool, target, end)
         return end
 
     def _decode_round(self, pool: str, ndev: int, t: float, active,
@@ -342,6 +377,8 @@ class Engine:
         else:
             dur = model.decode_ms(len(batch), ndev)
         end = t + dur
+        if self.oracle is not None:
+            self.oracle.on_decode(t, end, pool, batch)
         charge(pool, "light", dur)
         still = []
         for r in batch:
@@ -356,19 +393,6 @@ class Engine:
                 still.append(r)
         active[pool] = still + active[pool][cfg.decode_batch_max:]
         return end
-
-
-def poisson_workload(rate_per_s: float, duration_ms: float, *,
-                     prompt_len=4096, max_new=128, seed=0) -> List[Request]:
-    rng = np.random.default_rng(seed)
-    out, t, rid = [], 0.0, 0
-    while t < duration_ms:
-        t += rng.exponential(1000.0 / rate_per_s)
-        pl_ = int(prompt_len * rng.uniform(0.5, 1.5))
-        out.append(Request(rid=rid, arrive_ms=t, prompt_len=pl_,
-                           max_new=max_new))
-        rid += 1
-    return out
 
 
 def pool_model_from_dryrun(results: dict, arch: str,

@@ -300,3 +300,37 @@ class AdaptivePolicy(Policy):
             return None
         st.proposal, st.streak = None, 0
         return topo.resized(heavy.name, want)
+
+
+# ------------------------------------------------------ policy registry
+
+# name -> zero-arg factory. Factories (not instances) because policies
+# may be stateful (AdaptivePolicy's EMA/debounce state): every replay
+# must start from a fresh object or runs would contaminate each other.
+POLICIES: Dict[str, type] = {}
+
+
+def register_policy(name: str, factory) -> None:
+    """Register a policy factory under ``name`` for the differential
+    replay harness (`repro.sched.replay`) and any registry-driven
+    consumer. Re-registering a name overwrites it (tests rely on this
+    to inject instrumented policies)."""
+    POLICIES[name] = factory
+
+
+def make_policy(name: str) -> Policy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"registered: {sorted(POLICIES)}") from None
+
+
+def registered_policies() -> Tuple[str, ...]:
+    return tuple(sorted(POLICIES))
+
+
+register_policy("shared", SharedBaselinePolicy)
+register_policy("specialized", SpecializedPolicy)
+register_policy("cohort", CohortPolicy)
+register_policy("adaptive", AdaptivePolicy)

@@ -1,0 +1,362 @@
+"""Differential trace-replay harness + engine-invariant oracle.
+
+One trace, every policy, both mechanisms. A scenario trace from
+`repro.sched.workload` is replayed
+
+  * through the event-driven serving engine (`sched/engine.py`) under
+    every policy in the `repro.sched.policy` registry (shared,
+    specialized, cohort, adaptive), with an :class:`EngineOracle`
+    observing every scheduling event and checking the engine's
+    invariants; and
+  * through the OS simulator (`core/simulator.py`, via
+    `core.experiments.run_trace_sim`) under the shared and specialized
+    policies — the same workload exercising the paper's original
+    mechanism.
+
+The result is a per-scenario metrics matrix (JSON-able) with derived
+headline numbers (itl tail spread per policy, specialized-vs-shared
+variability reduction) and every oracle violation. The tier-1 suite
+(`tests/test_scenarios.py`) asserts the matrix is deterministic, clean
+of violations, and that specialization beats the shared baseline in
+every scenario; CI runs ``python -m repro.sched.replay --smoke`` and
+fails if any oracle fires.
+
+Invariants checked by the oracle (the engine's contract):
+
+  EDF order            a prefill always serves the earliest deadline
+                       among waiting requests;
+  eligibility          work of kind K executes only on pools the policy
+                       declares eligible for K (capability respect —
+                       e.g. a specialized decode pool never prefills);
+  one handoff/transfer every pool change goes through exactly one
+                       counted handoff (no teleports, no self- or
+                       double-counted transfers);
+  work conservation    a pool never goes idle while it has active work
+                       or is eligible for waiting work;
+  progress sanity      no decode (hence no completion) before prefill
+                       finishes; token timestamps are monotone, so
+                       inter-token latencies are non-negative.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.sched.engine import Engine, PoolModel, Request, ServeConfig
+from repro.sched.policy import make_policy, registered_policies
+from repro.sched.topology import Topology, WorkKind
+from repro.sched.workload import SCENARIOS, Trace, scenario_trace
+
+# The reference replay cell (same service-time model the conformance
+# suites pin): per-chip roofline terms of a mid-size dry-run cell.
+REPLAY_MODEL = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
+                         decode_ms_per_seq=24.0, handoff_ms=2.0)
+
+MAX_RECORDED_VIOLATIONS = 100
+
+
+class EngineOracle:
+    """Checks engine invariants during a run via the hook points
+    threaded through ``Engine.run``. Violations are collected, not
+    raised — a replay reports every broken invariant, not just the
+    first."""
+
+    def __init__(self):
+        self.violations: List[Dict] = []
+        self.n_violations = 0
+        self._engine: Optional[Engine] = None
+        self._arrived: List[Request] = []
+        self._pool_of: Dict[int, str] = {}     # rid -> current pool
+        self._transfers = 0
+
+    # ------------------------------------------------------- recording
+
+    def _flag(self, check: str, t: float, detail: str):
+        self.n_violations += 1
+        if len(self.violations) < MAX_RECORDED_VIOLATIONS:
+            self.violations.append(
+                {"check": check, "t_ms": round(t, 3), "detail": detail})
+
+    def _eligible(self, pool_name: str, kind: WorkKind) -> bool:
+        eng = self._engine
+        return eng.policy.eligible(eng.topo, eng.topo.pool(pool_name), kind)
+
+    # ----------------------------------------------------------- hooks
+
+    def bind(self, engine: Engine):
+        self._engine = engine
+
+    def on_arrive(self, t: float, r: Request):
+        self._arrived.append(r)
+        window = self._engine.cfg.deadline_window_ms \
+            if r.deadline_window_ms is None else r.deadline_window_ms
+        if r.deadline != r.arrive_ms + window:
+            self._flag("deadline", t,
+                       f"rid={r.rid} deadline {r.deadline} != "
+                       f"arrive+window {r.arrive_ms + window}")
+
+    def on_prefill(self, t: float, pool: str, r: Request, waiting):
+        if waiting and r.deadline > min(w[0] for w in waiting):
+            self._flag("edf", t,
+                       f"rid={r.rid} deadline {r.deadline} prefilled "
+                       f"before earlier-deadline waiting work")
+        if not self._eligible(pool, WorkKind.HEAVY):
+            self._flag("eligibility", t,
+                       f"heavy work (rid={r.rid}) on ineligible "
+                       f"pool {pool!r}")
+        self._pool_of[r.rid] = pool
+
+    def on_transfer(self, t: float, reqs: Sequence[Request], src: str,
+                    dst: str):
+        if src == dst:
+            self._flag("handoff", t, f"self-transfer on {src!r}")
+        for r in reqs:
+            known = self._pool_of.get(r.rid)
+            if known is not None and known != src:
+                self._flag("handoff", t,
+                           f"rid={r.rid} transferred from {src!r} but "
+                           f"was resident on {known!r}")
+            self._pool_of[r.rid] = dst
+        self._transfers += len(reqs)
+
+    def on_decode(self, t0: float, t1: float, pool: str,
+                  batch: Sequence[Request]):
+        if t1 < t0:
+            self._flag("progress", t0, f"decode ends at {t1} < {t0}")
+        if not self._eligible(pool, WorkKind.LIGHT):
+            self._flag("eligibility", t0,
+                       f"light work on ineligible pool {pool!r}")
+        for r in batch:
+            if r.prefilled < r.prompt_len:
+                self._flag("progress", t0,
+                           f"rid={r.rid} decoding with prefill "
+                           f"{r.prefilled}/{r.prompt_len} incomplete")
+            if r.last_token_ms is None or r.last_token_ms > t1:
+                self._flag("progress", t0,
+                           f"rid={r.rid} non-monotone token time "
+                           f"{r.last_token_ms} > {t1}")
+            resident = self._pool_of.get(r.rid)
+            if resident is not None and resident != pool:
+                self._flag("handoff", t0,
+                           f"rid={r.rid} decoding on {pool!r} but "
+                           f"resident on {resident!r} (transfer "
+                           f"without handoff)")
+
+    def on_idle(self, t: float, pool: str, n_waiting: int, n_active: int):
+        if n_active > 0:
+            self._flag("work-conservation", t,
+                       f"pool {pool!r} idles with {n_active} active "
+                       f"requests")
+        if n_waiting > 0 and self._eligible(pool, WorkKind.HEAVY):
+            self._flag("work-conservation", t,
+                       f"pool {pool!r} idles with {n_waiting} waiting "
+                       f"heavy-eligible requests")
+
+    def on_end(self, m):
+        if m.handoffs != self._transfers:
+            self._flag("handoff", m.total_ms,
+                       f"handoffs counted {m.handoffs} != transfers "
+                       f"observed {self._transfers}")
+        for r in self._arrived:
+            if r.done_ms is None:
+                continue
+            if r.prefilled < r.prompt_len:
+                self._flag("progress", r.done_ms,
+                           f"rid={r.rid} finished with incomplete "
+                           f"prefill {r.prefilled}/{r.prompt_len}")
+            if r.ttft_ms is None or r.done_ms < r.arrive_ms + r.ttft_ms:
+                self._flag("progress", r.done_ms,
+                           f"rid={r.rid} finished before its first "
+                           f"token")
+
+
+# ------------------------------------------------------ headline metrics
+
+
+def headline_metrics(shared_summary: Dict, specialized_summary: Dict
+                     ) -> Dict[str, float]:
+    """The paper-analogue headline: ITL tail spread (p99 - p50, the
+    variability measure) per setup and the specialized-vs-shared
+    reductions. Single definition — the scenario matrix, the
+    serving benchmark, and the regression pin all derive from here."""
+    spread_ns = shared_summary["itl_p99_ms"] - shared_summary["itl_p50_ms"]
+    spread_sp = specialized_summary["itl_p99_ms"] \
+        - specialized_summary["itl_p50_ms"]
+    return {
+        "itl_spread_shared_ms": spread_ns,
+        "itl_spread_specialized_ms": spread_sp,
+        "itl_variability_reduction": 1.0 - spread_sp / max(spread_ns, 1e-9),
+        "itl_p99_reduction": 1.0 - specialized_summary["itl_p99_ms"]
+        / max(shared_summary["itl_p99_ms"], 1e-9),
+    }
+
+
+# --------------------------------------------------------- single replay
+
+
+def default_topology(policy_name: str, n_devices: int,
+                     prefill_devices: int) -> Topology:
+    """Canonical layout per policy: splitting policies get the serving
+    prefill/decode split, non-splitting ones the shared pool."""
+    if policy_name in ("specialized", "adaptive"):
+        return Topology.serving(n_devices, prefill_devices)
+    return Topology.shared(n_devices)
+
+
+def replay_engine(trace: Trace, policy_name: str, *, n_devices: int = 16,
+                  prefill_devices: int = 4,
+                  model: Optional[PoolModel] = None,
+                  cfg: Optional[ServeConfig] = None,
+                  horizon_ms: Optional[float] = None,
+                  drain_ms: float = 20_000.0) -> Dict:
+    """Replay one trace through the serving engine under one registered
+    policy, with the oracle attached. Fresh policy + requests per call:
+    replays never contaminate each other.
+
+    The default horizon is the trace duration plus ``drain_ms`` so
+    late-arriving requests finish decoding — engine completion counts
+    stay comparable with the simulator leg, which drains too. An
+    explicit ``horizon_ms`` is used as-is."""
+    topo = default_topology(policy_name, n_devices, prefill_devices)
+    policy = make_policy(policy_name)
+    oracle = EngineOracle()
+    eng = Engine(topo, policy, model or REPLAY_MODEL, cfg)
+    m = eng.run(trace.to_engine_requests(),
+                trace.duration_ms + drain_ms if horizon_ms is None
+                else horizon_ms,
+                oracle=oracle)
+    s = m.summary()
+    s["itl_spread_ms"] = s["itl_p99_ms"] - s["itl_p50_ms"]
+    return {
+        "mechanism": "engine",
+        "policy": policy_name,
+        "topology": topo.to_dict(),
+        "metrics": s,
+        "n_violations": oracle.n_violations,
+        "violations": oracle.violations,
+    }
+
+
+# --------------------------------------------------------------- matrix
+
+
+def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
+                    duration_ms: float = 30_000.0, seed: int = 0,
+                    n_devices: int = 16, prefill_devices: int = 4,
+                    policies: Optional[Sequence[str]] = None,
+                    simulator: bool = True) -> Dict:
+    """The differential matrix: every scenario x every registered
+    policy through the engine (+ shared/specialized through the OS
+    simulator), one identical trace per scenario."""
+    from repro.core.experiments import run_trace_sim
+    names = list(scenarios) if scenarios is not None else sorted(SCENARIOS)
+    pols = list(policies) if policies is not None \
+        else list(registered_policies())
+    out: Dict[str, Dict] = {
+        "_config": {"duration_ms": duration_ms, "seed": seed,
+                    "n_devices": n_devices,
+                    "prefill_devices": prefill_devices,
+                    "policies": pols, "scenarios": names},
+    }
+    for name in names:
+        trace = scenario_trace(name, duration_ms=duration_ms, seed=seed)
+        cell: Dict = {
+            "trace": {"scenario": name, "seed": seed,
+                      "duration_ms": duration_ms,
+                      "n_requests": len(trace.requests)},
+            "engine": {},
+        }
+        for pol in pols:
+            cell["engine"][pol] = replay_engine(
+                trace, pol, n_devices=n_devices,
+                prefill_devices=prefill_devices)
+        if simulator:
+            cell["simulator"] = {
+                "shared": run_trace_sim(trace, False),
+                "specialized": run_trace_sim(trace, True),
+            }
+        if "shared" in cell["engine"] and "specialized" in cell["engine"]:
+            cell["derived"] = headline_metrics(
+                cell["engine"]["shared"]["metrics"],
+                cell["engine"]["specialized"]["metrics"])
+        out[name] = cell
+    return out
+
+
+def total_violations(matrix: Dict) -> int:
+    return sum(run.get("n_violations", 0)
+               for name, cell in matrix.items() if not name.startswith("_")
+               for run in cell.get("engine", {}).values())
+
+
+def matrix_rows(matrix: Dict) -> List[str]:
+    """Human-readable summary lines, one per scenario x policy."""
+    rows = []
+    for name, cell in matrix.items():
+        if name.startswith("_"):
+            continue
+        for pol, run in cell.get("engine", {}).items():
+            s = run["metrics"]
+            rows.append(
+                f"{name:<14} {pol:<12} itl_p50={s['itl_p50_ms']:7.1f}ms "
+                f"itl_p99={s['itl_p99_ms']:8.1f}ms "
+                f"spread={s['itl_spread_ms']:8.1f}ms "
+                f"done={s['completed']:4d} "
+                f"violations={run['n_violations']}")
+        d = cell.get("derived")
+        if d:
+            rows.append(
+                f"{name:<14} {'-> spec/shared':<12} "
+                f"variability_reduction="
+                f"{100 * d['itl_variability_reduction']:.0f}% "
+                f"p99_reduction={100 * d['itl_p99_reduction']:.0f}%")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="short traces on a small cell (CI gate)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="trace duration in ms (default 30000; "
+                         "smoke 8000)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--no-simulator", action="store_true",
+                    help="skip the OS-simulator leg of the differential")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the full metrics matrix as JSON")
+    args = ap.parse_args(argv)
+    duration = args.duration or (8_000.0 if args.smoke else 30_000.0)
+    matrix = scenario_matrix(
+        args.scenarios, duration_ms=duration, seed=args.seed,
+        n_devices=8 if args.smoke else 16,
+        prefill_devices=2 if args.smoke else 4,
+        simulator=not args.no_simulator)
+    for row in matrix_rows(matrix):
+        print(row)
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(json.dumps(matrix, indent=1, sort_keys=True))
+        print(f"matrix -> {args.out}")
+    n_bad = total_violations(matrix)
+    if n_bad:
+        print(f"ORACLE VIOLATIONS: {n_bad}")
+        for name, cell in matrix.items():
+            if name.startswith("_"):
+                continue
+            for pol, run in cell.get("engine", {}).items():
+                for v in run["violations"][:5]:
+                    print(f"  {name}/{pol}: [{v['check']}] t={v['t_ms']} "
+                          f"{v['detail']}")
+        return 1
+    print(f"replay: OK — {len(matrix) - 1} scenarios x "
+          f"{len(matrix['_config']['policies'])} policies, "
+          f"0 oracle violations")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -128,6 +128,23 @@ class Topology:
                         for p in self.pools)
         return Topology(ordered)
 
+    # ----------------------------------------------------- serialization
+
+    def to_dict(self) -> Dict:
+        """JSON-able description (the replay harness records the exact
+        layout each run used in its metrics matrix)."""
+        return {"pools": [{"name": p.name, "units": list(p.units),
+                           "capabilities": sorted(k.value
+                                                  for k in p.capabilities)}
+                          for p in self.pools]}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Topology":
+        return Topology(tuple(
+            Pool(p["name"], tuple(p["units"]),
+                 frozenset(WorkKind(k) for k in p["capabilities"]))
+            for p in d["pools"]))
+
     # -------------------------------------------------------- factories
 
     @staticmethod

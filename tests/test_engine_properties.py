@@ -1,0 +1,97 @@
+"""Property-based engine invariants (hypothesis, or the deterministic
+stub from tests/_hypothesis_stub.py in minimal environments).
+
+Random workload shapes x random policies, every run oracle-checked:
+no request finishes before its prefill completes, inter-token latencies
+are non-negative and token timestamps monotone, handoffs are counted
+exactly once per transfer, and the percentile helpers are total on
+empty/singleton inputs.
+"""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import Metrics as SimMetrics
+from repro.sched.engine import ServeMetrics
+from repro.sched.replay import replay_engine
+from repro.sched.workload import (PoissonArrivals, Tenant, UniformLen,
+                                  WorkloadSpec, poisson_workload)
+
+POLICY_NAMES = ("shared", "specialized", "cohort", "adaptive")
+
+
+def _spec(rate, prompt_hi, max_new, window, seed):
+    return WorkloadSpec(
+        name="prop",
+        arrival=PoissonArrivals(rate_per_s=rate),
+        prompt_lens=UniformLen(256, prompt_hi),
+        output_lens=UniformLen(4, max_new),
+        tenants=(Tenant("a", 0.7, window), Tenant("b", 0.3, None)),
+        duration_ms=6_000.0, seed=seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000),
+       st.floats(min_value=0.5, max_value=6.0),
+       st.integers(1024, 4096),
+       st.integers(8, 64),
+       st.floats(min_value=5.0, max_value=500.0),
+       st.sampled_from(POLICY_NAMES))
+def test_engine_invariants_hold_for_random_workloads(
+        seed, rate, prompt_hi, max_new, window, policy):
+    trace = _spec(rate, prompt_hi, max_new, window, seed).generate()
+    run = replay_engine(trace, policy, horizon_ms=12_000.0)
+    assert run["n_violations"] == 0, (policy, run["violations"][:3])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(POLICY_NAMES))
+def test_no_finish_before_prefill_and_itl_nonnegative(seed, policy):
+    from repro.sched.engine import Engine, PoolModel
+    from repro.sched.replay import EngineOracle, default_topology
+    from repro.sched.policy import make_policy
+    reqs = poisson_workload(3.0, 8_000.0, prompt_len=2048, max_new=16,
+                            seed=seed)
+    orc = EngineOracle()
+    eng = Engine(default_topology(policy, 16, 4), make_policy(policy),
+                 PoolModel(prefill_ms_per_ktok=320.0,
+                           decode_fixed_ms=760.0, decode_ms_per_seq=24.0))
+    m = eng.run(reqs, 20_000.0, oracle=orc)
+    assert orc.n_violations == 0, orc.violations[:3]
+    assert all(x >= 0.0 for x in m.itl_ms)
+    assert all(x >= 0.0 for x in m.ttft_ms)
+    for r in reqs:
+        if r.done_ms is not None:           # finished ⇒ fully prefilled
+            assert r.prefilled >= r.prompt_len
+            assert r.generated >= r.max_new
+            assert r.done_ms >= r.arrive_ms + r.ttft_ms
+
+
+# --------------------------------------------- percentile helper totality
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0))
+def test_serve_metrics_percentile_empty_and_singleton(q):
+    m = ServeMetrics()
+    assert m.p([], q) == 0.0
+    assert m.p([42.5], q) == 42.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6), min_size=2,
+                max_size=40),
+       st.floats(min_value=0.0, max_value=1.0))
+def test_serve_metrics_percentile_bounded_and_monotone(xs, q):
+    m = ServeMetrics()
+    v = m.p(xs, q)
+    assert min(xs) <= v <= max(xs)
+    assert m.p(xs, 0.0) <= m.p(xs, 0.5) <= m.p(xs, 0.99)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0))
+def test_sim_metrics_percentile_empty_and_singleton(q):
+    m = SimMetrics()
+    assert m.p(q) == 0.0                  # empty: total, returns 0
+    m.latencies_us.append(7.0)
+    assert m.p(q) == 7.0                  # singleton: the one element

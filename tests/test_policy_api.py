@@ -10,7 +10,8 @@ from repro.core.task import Task, TaskType
 from repro.sched import (AdaptivePolicy, CohortPolicy, SharedBaselinePolicy,
                          SpecializedPolicy, Topology, WorkKind)
 from repro.sched.engine import (Engine, PoolModel, ServeConfig,
-                                pool_model_from_dryrun, poisson_workload)
+                                pool_model_from_dryrun)
+from repro.sched.workload import poisson_workload
 
 PM = PoolModel(prefill_ms_per_ktok=326.0, decode_fixed_ms=757.0,
                decode_ms_per_seq=23.6, handoff_ms=2.0)

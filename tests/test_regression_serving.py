@@ -1,0 +1,60 @@
+"""Regression pin for the serving-specialization headline numbers.
+
+PR 2 reported ≈34% itl_p99 / ≈83% variability reduction. Those figures
+were inflated by a handoff-delivery bug (requests became decodable on a
+busy target pool *before* their prefill+handoff finished in simulated
+time, producing negative inter-token latencies that compressed the
+specialized tail). The replay oracle's monotonicity check caught it;
+with delivery fixed the honest benchmark numbers are ≈24% itl_p99 and
+≈67% variability reduction — still the paper's qualitative claim
+(specialization removes most AVX-analogue-induced variability), now
+measured without negative samples.
+
+This test pins those corrected numbers in a tolerance band so future
+refactors can't silently regress (or silently re-inflate) the
+reproduction. Marked slow: it runs the full 60 s benchmark trace.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+
+import serving_specialization  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return serving_specialization.run(duration_ms=60_000.0)
+
+
+@pytest.mark.slow
+def test_itl_p99_reduction_band(bench):
+    assert 0.15 <= bench["itl_p99_reduction"] <= 0.40, bench
+
+
+@pytest.mark.slow
+def test_itl_variability_reduction_band(bench):
+    assert 0.55 <= bench["itl_variability_reduction"] <= 0.80, bench
+
+
+@pytest.mark.slow
+def test_no_negative_itl_artifacts(bench):
+    """The corrected engine produces physically meaningful latencies:
+    medians and tails are positive and ordered under both setups."""
+    for key in ("nospec", "spec"):
+        s = bench[key]
+        assert 0 < s["itl_p50_ms"] <= s["itl_p99_ms"], (key, s)
+        assert s["completed"] > 0
+    assert bench["spec"]["handoffs"] > 0
+    assert bench["nospec"]["handoffs"] == 0
+
+
+@pytest.mark.slow
+def test_throughput_parity_preserved(bench):
+    """Specialization trades TTFT for tail stability but must not cost
+    throughput (PR 2 invariant, re-pinned post-fix)."""
+    assert bench["spec"]["throughput_tok_s"] >= \
+        0.9 * bench["nospec"]["throughput_tok_s"], bench

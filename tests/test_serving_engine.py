@@ -6,8 +6,8 @@ import copy
 import pytest
 
 from repro.sched import SharedBaselinePolicy, SpecializedPolicy, Topology
-from repro.sched.engine import (Engine, PoolModel, ServeConfig,
-                                poisson_workload)
+from repro.sched.engine import Engine, PoolModel, ServeConfig
+from repro.sched.workload import poisson_workload
 
 PM = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
                decode_ms_per_seq=24.0, handoff_ms=2.0)
