@@ -82,7 +82,11 @@ def rows(duration_ms: float = 60_000.0, scenario: str = None):
                     f"itl_p50={s['itl_p50_ms']:.1f}ms "
                     f"itl_p99={s['itl_p99_ms']:.1f}ms "
                     f"ttft_p99={s['ttft_p99_ms']:.0f}ms "
-                    f"tok/s={s['throughput_tok_s']:.0f}"))
+                    f"tok/s={s['throughput_tok_s']:.0f} "
+                    f"f={s['avg_freq_ghz']:.2f}GHz "
+                    f"lic_res={100 * s['license_residency']:.0f}% "
+                    f"thr={s['throttled_ms']:.0f}ms "
+                    f"E={s['energy_proxy']:.0f}"))
     out.append(("serving[itl_p99_reduction]", wall,
                 f"{100 * res.get('itl_p99_reduction', 0):.0f}%"))
     out.append(("serving[itl_variability_reduction]", wall,

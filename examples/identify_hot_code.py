@@ -24,9 +24,10 @@ from repro.core.simulator import Simulator  # noqa: E402
 from repro.core.static_analysis import (  # noqa: E402
     FunctionProfile, rank_functions, report)
 from repro.core.workloads import WebConfig, webserver_tasks  # noqa: E402
+from repro.sched import Topology, make_policy  # noqa: E402
 
 
-def main():
+def main(sim_us: float = 300_000.0):
     # ---- 1. static analysis over the application's functions ----------
     d, ff = 256, 1024
     w1 = jnp.zeros((d, ff))
@@ -53,12 +54,16 @@ def main():
     print(report(ranked))
 
     # ---- 2. perf-counter pass in the simulator ------------------------
+    # The unified repro.sched API: an explicit one-pool Topology and a
+    # registry policy, not the pre-PR-2 config flags.
     print("\n== CORE_POWER.THROTTLE flame graph (folded stacks) ==")
     sim = Simulator(SchedConfig(n_cores=12, n_avx_cores=0,
-                                specialization=False))
+                                specialization=False),
+                    topology=Topology.shared(12),
+                    policy=make_policy("shared"))
     for t in webserver_tasks(WebConfig(isa="avx512")):
         sim.add_task(t)
-    sim.run(300_000)
+    sim.run(sim_us)
     rep = collect(sim)
     print(rep.folded("throttle")[:800])
     print("\nlicense residency:", {k: round(v, 3)
@@ -77,6 +82,7 @@ def main():
     assert not any("brotli" in c for c in confirmed)
     print("\n(nginx prototype: 9 annotation lines around SSL_read/SSL_write/"
           "SSL_do_handshake/SSL_shutdown — paper §4)")
+    return confirmed
 
 
 if __name__ == "__main__":

@@ -19,8 +19,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.license import LicenseConfig
-
 
 @dataclass
 class AdaptiveConfig:
@@ -38,11 +36,15 @@ class AdaptiveState:
 
 
 class AdaptivePolicy:
-    def __init__(self, cfg: AdaptiveConfig, n_cores: int,
-                 lic: LicenseConfig = LicenseConfig()):
+    def __init__(self, cfg: AdaptiveConfig, n_cores: int, freq=None):
+        # repro.sched.freq is imported lazily: repro.sched.policy
+        # imports this module at its own import time, so a module-level
+        # import here would make `import repro.core.adaptive` (as the
+        # first repro import of a process) circular
+        from repro.sched.freq import FreqDomainConfig
         self.cfg = cfg
         self.n_cores = n_cores
-        self.lic = lic
+        self.freq = freq if freq is not None else FreqDomainConfig()
         self.state = AdaptiveState()
 
     def estimate_benefit(self, scalar_share: float, heavy_share: float,
@@ -51,8 +53,8 @@ class AdaptivePolicy:
 
         Without specialization every core spends ~l2_residency of its time
         at the reduced frequency; with it, only the AVX pool does."""
-        f = self.lic.freqs_ghz
-        drop = 1.0 - f[2] / f[0]
+        f = self.freq.freqs_ghz
+        drop = 1.0 - f[-1] / f[0]
         pool = self.pool_size(heavy_share) / self.n_cores
         return scalar_share * l2_residency * drop * (1.0 - pool)
 

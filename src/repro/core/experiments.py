@@ -52,6 +52,7 @@ def run_webserver(isa: str, specialization: bool, *,
         "p50_us": m.p(0.50),
         "p99_us": m.p(0.99),
         "counters": sim.counters(),
+        "license": sim.license_snapshot(),
         "flame_throttle": {"/".join(k): v
                            for k, v in m.flame_throttle.items()},
     }
@@ -152,6 +153,7 @@ def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
     until = max((at for _, at in tasks), default=0.0) + slack_us
     m = sim.run(until)
     c = sim.counters()
+    lic = sim.license_snapshot()
     return {
         "mechanism": "simulator",
         "policy": pol.name,
@@ -160,6 +162,9 @@ def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
         "latency_p50_us": m.p(0.50),
         "latency_p99_us": m.p(0.99),
         "avg_freq_ghz": sim.avg_frequency_ghz(),
+        "license_residency": lic["license_residency"],
+        "freq_transitions": lic["transitions"],
+        "energy_proxy": lic["energy_proxy"],
         "migrations": c["migrations"],
         "type_changes": c["type_changes"],
     }

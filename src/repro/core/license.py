@@ -1,27 +1,30 @@
-"""Per-core power-license / frequency state machine (paper §2, Fig. 1).
+"""Per-core power-license view over the unified frequency-domain layer.
 
-Model of the documented Intel Skylake-SP behaviour:
+The license state machine itself now lives in
+:mod:`repro.sched.freq` (:class:`FrequencyDomain`) — ONE implementation
+drives both the OS simulator (per-core, µs time base) and the serving
+engine (per-pool, ms time base). This module keeps the paper-facing
+surface:
 
-  * three license levels with per-level max frequency — Xeon Gold 6130
-    all-core turbo: L0 2.8 GHz, L1 (heavy AVX2) 2.4 GHz, L2 (heavy
-    AVX-512) 1.9 GHz [paper §2/§4];
-  * a core requests a lower-frequency license when it executes a
-    sufficiently dense heavy section; the PCU takes up to 500 µs to grant,
-    during which the core runs with reduced performance (we model the
-    request window at the target frequency);
-  * ~100-instruction detection delay before the request (negligible at µs
-    scale but modelled);
-  * reverting to a higher level is delayed ~2 ms after the last heavy
-    section (the hysteresis that slows trailing scalar code).
+  * :class:`LicenseConfig` — the µs-named knobs (grant window <= 500 µs,
+    ~2 ms revert hysteresis, ~100-instruction detection delay) from
+    paper §2/Fig. 1, with ``domain_config()`` mapping onto the generic
+    :class:`repro.sched.freq.FreqDomainConfig`;
+  * ``LEVEL_OF`` — the instruction-class -> license-level mapping
+    (SCALAR -> L0, heavy AVX2 -> L1, heavy AVX-512 -> L2; Xeon Gold
+    6130 all-core turbo 2.8 / 2.4 / 1.9 GHz, paper §2/§4);
+  * :class:`CoreLicense` — a :class:`FrequencyDomain` whose ``execute``
+    speaks :class:`repro.core.task.IClass` instead of raw level ints.
 
 All times in µs, frequencies in GHz (cycles/µs = GHz * 1000).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 from repro.core.task import IClass
+from repro.sched.freq import FreqDomainConfig, FrequencyDomain
 
 
 @dataclass(frozen=True)
@@ -33,91 +36,31 @@ class LicenseConfig:
     throttle_factor: float = 0.75          # x target freq during request
     #   (§2/Fig.1: "executes at reduced performance while requesting")
 
+    def domain_config(self) -> FreqDomainConfig:
+        """The equivalent generic frequency-domain parameters (µs time
+        base, 1000 cycles per µs per GHz)."""
+        return FreqDomainConfig(
+            freqs_ghz=tuple(self.freqs_ghz),
+            grant_delay=self.grant_delay_us,
+            hysteresis=self.hysteresis_us,
+            detect_delay=self.detect_delay_us,
+            throttle_factor=self.throttle_factor,
+            cycles_per_ghz=1000.0,
+            time_unit="us")
+
 
 LEVEL_OF = {IClass.SCALAR: 0, IClass.AVX2: 1, IClass.AVX512: 2}
 
 
-@dataclass
-class CoreLicense:
-    cfg: LicenseConfig = field(default_factory=LicenseConfig)
-    level: int = 0                          # currently granted level
-    pending: Optional[int] = None           # requested level
-    grant_at: float = 0.0                   # when pending becomes level
-    revert_at: Optional[float] = None       # hysteresis expiry
-    last_heavy_end: float = 0.0
-    # accounting (CORE_POWER.* perf counters)
-    cycles_at_level: List[float] = field(default_factory=lambda: [0.0, 0.0, 0.0])
-    throttle_cycles: float = 0.0
-    transitions: int = 0
+class CoreLicense(FrequencyDomain):
+    """A per-core frequency domain addressed by instruction class."""
 
-    def _advance(self, t: float):
-        if self.pending is not None and t >= self.grant_at:
-            self.level = self.pending
-            self.pending = None
-            self.transitions += 1
-        if self.revert_at is not None and t >= self.revert_at:
-            self.level = 0
-            self.revert_at = None
-            self.transitions += 1
-
-    def speed_ghz(self, t: float) -> float:
-        self._advance(t)
-        if self.pending is not None:
-            return self.cfg.freqs_ghz[self.pending] * self.cfg.throttle_factor
-        return self.cfg.freqs_ghz[self.level]
-
-    def next_event(self, t: float) -> Optional[float]:
-        ev = []
-        if self.pending is not None and self.grant_at > t:
-            ev.append(self.grant_at)
-        if self.revert_at is not None and self.revert_at > t:
-            ev.append(self.revert_at)
-        return min(ev) if ev else None
+    def __init__(self, cfg: LicenseConfig = LicenseConfig(),
+                 record: bool = False):
+        super().__init__(cfg.domain_config(), record=record)
 
     def execute(self, t: float, cycles: float, iclass: IClass,
                 dense: bool) -> float:
-        """Run `cycles` nominal cycles starting at t; returns end time and
-        updates license state + counters."""
-        self._advance(t)
-        want = LEVEL_OF[iclass]
-        if dense and want > self.level and (
-                self.pending is None or self.pending < want):
-            # request a lower-frequency (higher-index) license
-            self.pending = want
-            self.grant_at = t + self.cfg.detect_delay_us \
-                + self.cfg.grant_delay_us
-        if dense and want >= 1:
-            # dense heavy section: cancel any pending revert (the license
-            # timer refreshes); sparse heavy sections do not sustain it
-            self.revert_at = None
-        remaining = cycles
-        now = t
-        while remaining > 1e-9:
-            v = self.speed_ghz(now) * 1000.0               # cycles / µs
-            nxt = self.next_event(now)
-            span = remaining / v if nxt is None else min(remaining / v,
-                                                         nxt - now)
-            done = span * v
-            self.cycles_at_level[self.level if self.pending is None
-                                 else self.pending] += done
-            if self.pending is not None:
-                self.throttle_cycles += done
-            remaining -= done
-            now += span
-            self._advance(now)
-        if dense and want >= 1:
-            self.last_heavy_end = now
-            self.revert_at = now + self.cfg.hysteresis_us
-        return now
-
-    def freq_time_integral(self) -> Tuple[float, float]:
-        """(sum freq*cycles? no:) returns (weighted_time, total_time) where
-        weighted uses level frequencies; used for Fig. 6 averages."""
-        f = self.cfg.freqs_ghz
-        total_c = sum(self.cycles_at_level)
-        if total_c == 0:
-            return (f[0], 0.0)
-        t_at = [c / (f[i] * 1000.0) for i, c in enumerate(self.cycles_at_level)]
-        total_t = sum(t_at)
-        avg = sum(f[i] * t_at[i] for i in range(3)) / total_t
-        return (avg, total_t)
+        """Run `cycles` nominal cycles starting at t; returns end time
+        and updates license state + counters."""
+        return super().execute(t, cycles, LEVEL_OF[iclass], dense)

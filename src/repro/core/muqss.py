@@ -37,7 +37,11 @@ from repro.sched.policy import (LIGHT_PENALTY, Policy, SharedBaselinePolicy,
                                 SpecializedPolicy)
 from repro.sched.topology import Topology, WorkKind
 
-SCALAR_PENALTY = LIGHT_PENALTY  # added to scalar deadlines on AVX cores
+# Added to scalar deadlines on AVX cores. No longer a magic 1e12: the
+# value is derived from the frequency domain's worst-case slowdown
+# (repro.sched.policy.light_penalty) so the deprioritization traces to
+# the same license physics both mechanisms share.
+SCALAR_PENALTY = LIGHT_PENALTY
 
 # TaskType <-> WorkKind: the scheduler speaks TaskType (the paper's
 # annotation API), the policy speaks WorkKind (mechanism-agnostic).

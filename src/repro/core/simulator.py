@@ -19,9 +19,10 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.license import CoreLicense, LicenseConfig
+from repro.core.license import LEVEL_OF, LicenseConfig
 from repro.core.muqss import SchedConfig, Scheduler
 from repro.core.task import IClass, Segment, Task, TaskType, TypeChange
+from repro.sched.freq import FrequencyDomain
 from repro.sched.policy import Policy
 from repro.sched.topology import Topology
 
@@ -76,7 +77,10 @@ class Simulator:
         derives both from sched_cfg (n_avx_cores / specialization)."""
         self.sched = Scheduler(sched_cfg, topology=topology, policy=policy)
         n_cores = self.sched.n_cores
-        self.lic = [CoreLicense(lic_cfg) for _ in range(n_cores)]
+        # one frequency domain per core — the same state machine the
+        # serving engine attaches per pool (repro.sched.freq)
+        self.lic = [FrequencyDomain(lic_cfg.domain_config())
+                    for _ in range(n_cores)]
         self.cfg = sched_cfg
         self.ipc_bonus = ipc_locality_bonus
         self.metrics = Metrics()
@@ -181,7 +185,7 @@ class Simulator:
         else:
             run_eff = run
         thr0 = lic.throttle_cycles
-        t_end = lic.execute(t, run_eff, seg.iclass, seg.dense)
+        t_end = lic.execute(t, run_eff, LEVEL_OF[seg.iclass], seg.dense)
         self.metrics.busy_us += t_end - t
         if seg.stack:
             dthr = lic.throttle_cycles - thr0
@@ -225,4 +229,18 @@ class Simulator:
             "type_changes": self.sched.type_changes,
             "steals": self.sched.steals,
             "ipis": self.sched.ipis,
+        }
+
+    def license_snapshot(self) -> Dict[str, float]:
+        """Aggregated frequency-domain accounting across all cores —
+        the same columns the serving engine reports per pool."""
+        busy = sum(l.busy_time for l in self.lic)
+        reduced = sum(l.reduced_time() for l in self.lic)
+        return {
+            "busy_us": busy,
+            "reduced_us": reduced,
+            "license_residency": reduced / busy if busy else 0.0,
+            "throttled_us": sum(l.throttled_time for l in self.lic),
+            "transitions": sum(l.transitions for l in self.lic),
+            "energy_proxy": sum(l.energy for l in self.lic),
         }

@@ -162,6 +162,12 @@ def run_engine(args, cfg, model, params):
         for k, v in m.pool_busy.items())
     print(f"[serve] handoffs={s['handoffs']} steals={s['steals']} "
           f"pool_busy={{{busy}}}")
+    freq = ", ".join(
+        "{}: f={:.2f}GHz reduced={:.0f}ms transitions={} E={:.0f}".format(
+            k, f["avg_freq_ghz"], f["reduced"], f["transitions"],
+            f["energy_proxy"])
+        for k, f in m.pool_freq.items())
+    print(f"[serve] frequency domains: {{{freq}}}")
     return m
 
 

@@ -5,10 +5,12 @@ event-driven serving engine, and the scenario workload subsystem.
 consume this API; `sched/workload.py` generates seeded, JSON-replayable
 traces and `sched/replay.py` replays one trace differentially through
 every registered policy and both mechanisms."""
+from repro.sched.freq import (ENGINE_FREQ_MS, KV_HANDOFF_MS,
+                              FreqDomainConfig, FrequencyDomain)
 from repro.sched.policy import (POLICIES, AdaptivePolicy, CohortPolicy,
                                 LoadSignals, Policy, SharedBaselinePolicy,
                                 SpecializedPolicy, TypeChangeDecision,
-                                make_policy, register_policy,
+                                light_penalty, make_policy, register_policy,
                                 registered_policies)
 from repro.sched.topology import Pool, Topology, WorkKind
 from repro.sched.workload import (SCENARIOS, Tenant, Trace, WorkloadSpec,
@@ -16,10 +18,11 @@ from repro.sched.workload import (SCENARIOS, Tenant, Trace, WorkloadSpec,
                                   scenario_spec, scenario_trace)
 
 __all__ = [
-    "AdaptivePolicy", "CohortPolicy", "LoadSignals", "POLICIES", "Policy",
+    "AdaptivePolicy", "CohortPolicy", "ENGINE_FREQ_MS", "FreqDomainConfig",
+    "FrequencyDomain", "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "Policy",
     "Pool", "SCENARIOS", "SharedBaselinePolicy", "SpecializedPolicy",
     "Tenant", "Topology", "Trace", "TypeChangeDecision", "WorkKind",
-    "WorkloadSpec", "make_policy", "poisson_workload", "register_policy",
-    "register_scenario", "registered_policies", "scenario_spec",
-    "scenario_trace",
+    "WorkloadSpec", "light_penalty", "make_policy", "poisson_workload",
+    "register_policy", "register_scenario", "registered_policies",
+    "scenario_spec", "scenario_trace",
 ]

@@ -23,6 +23,17 @@ Service times come either from a :class:`PoolModel` (roofline terms of
 a dry-run cell; deterministic, used by benchmarks) or from a live
 ``executor`` that runs real jitted prefill/decode and reports measured
 durations (``launch/serve.py``).
+
+The engine is *frequency-native*: every pool carries a
+:class:`repro.sched.freq.FrequencyDomain` (the same license state
+machine that drives the OS simulator's cores) and every service
+duration is integrated through it. A heavy prefill requests/refreshes
+the pool's license; a decode landing inside the revert hysteresis runs
+slow because the pool's clock is still reduced — the paper's
+trailing-scalar slowdown, emergent instead of hand-tuned. License
+reverts are explicit events on the engine's heap, and per-pool
+frequency residency / transition counts / throttled time / an energy
+proxy land in :class:`ServeMetrics`.
 """
 from __future__ import annotations
 
@@ -30,6 +41,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.sched.freq import (ENGINE_FREQ_MS, KV_HANDOFF_MS,
+                              FreqDomainConfig, FrequencyDomain)
 from repro.sched.policy import LoadSignals, Policy
 from repro.sched.topology import Topology, WorkKind
 
@@ -71,7 +84,11 @@ class PoolModel:
     prefill_ms_per_ktok: float = 16.0      # per device
     decode_fixed_ms: float = 4.0           # params read / iteration
     decode_ms_per_seq: float = 0.08        # cache read per active seq
-    handoff_ms: float = 2.0                # KV migration between pools
+    # KV migration cost between pools. Numerically equal to the license
+    # revert hysteresis (ENGINE_FREQ_MS.hysteresis) BY COINCIDENCE —
+    # see the block comment in repro.sched.freq; never derive one from
+    # the other.
+    handoff_ms: float = KV_HANDOFF_MS
 
     def prefill_ms(self, tokens: int, n_dev: int) -> float:
         return self.prefill_ms_per_ktok * tokens / 1000.0 / max(n_dev, 1)
@@ -90,6 +107,10 @@ class ServeConfig:
     decode_batch_max: int = 256
     deadline_window_ms: float = 50.0
     resize_interval_ms: float = 1000.0
+    # per-pool frequency-domain physics (license levels, 0.5 ms grant
+    # window, 2 ms revert hysteresis) — the ms-base counterpart of the
+    # OS simulator's per-core LicenseConfig
+    freq: FreqDomainConfig = ENGINE_FREQ_MS
 
 
 @dataclass
@@ -104,6 +125,9 @@ class ServeMetrics:
     handoffs: int = 0
     # per-pool busy time by work kind ("heavy" = prefill, "light" = decode)
     pool_busy: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # per-pool frequency-domain accounting (FrequencyDomain.snapshot():
+    # time_at_level / throttled / transitions / avg_freq_ghz / energy)
+    pool_freq: Dict[str, Dict] = field(default_factory=dict)
     # (t_ms, {pool: n_units}) for every applied policy resize
     resize_events: List[Tuple[float, Dict[str, int]]] = \
         field(default_factory=list)
@@ -123,6 +147,10 @@ class ServeMetrics:
         return s[min(int(q * len(s)), len(s) - 1)]
 
     def summary(self) -> Dict[str, float]:
+        busy = sum(f["busy"] for f in self.pool_freq.values())
+        freq_time = sum(f["avg_freq_ghz"] * f["busy"]
+                        for f in self.pool_freq.values())
+        reduced = sum(f["reduced"] for f in self.pool_freq.values())
         return {
             "throughput_tok_s": 1000.0 * len(self.itl_ms)
             / self.total_ms if self.total_ms else 0.0,
@@ -134,6 +162,15 @@ class ServeMetrics:
             "steals": self.steals,
             "handoffs": self.handoffs,
             "resizes": len(self.resize_events),
+            # frequency/energy columns (busy-time-weighted across pools)
+            "avg_freq_ghz": freq_time / busy if busy else 0.0,
+            "license_residency": reduced / busy if busy else 0.0,
+            "throttled_ms": sum(f["throttled"]
+                                for f in self.pool_freq.values()),
+            "freq_transitions": sum(f["transitions"]
+                                    for f in self.pool_freq.values()),
+            "energy_proxy": sum(f["energy_proxy"]
+                                for f in self.pool_freq.values()),
         }
 
 
@@ -157,6 +194,7 @@ class Engine:
         self.cfg = cfg or ServeConfig()
         self.executor = executor
         self.oracle = None              # set per run()
+        self.domains: Dict[str, FrequencyDomain] = {}   # set per run()
 
     # ------------------------------------------------------------- run
 
@@ -176,6 +214,12 @@ class Engine:
         horizon = float("inf") if horizon_ms is None else horizon_ms
         n_units: Dict[str, int] = {p.name: p.n_units for p in self.topo}
         active: Dict[str, List[Request]] = {p.name: [] for p in self.topo}
+        # one frequency domain per pool, fresh per run (license state
+        # must not leak across replays); per-span recording only when an
+        # oracle wants to audit the frequency trace
+        self.domains = {p.name: FrequencyDomain(cfg.freq,
+                                                record=orc is not None)
+                        for p in self.topo}
         idle = set(n_units)
         waiting: List[Tuple[float, int, Request]] = []   # EDF heap
         events: List[Tuple[float, int, str, object]] = []
@@ -185,6 +229,14 @@ class Engine:
             nonlocal seq
             heapq.heappush(events, (t, seq, kind, payload))
             seq += 1
+
+        def sched_freq(pool: str, t: float):
+            """Schedule the pool's next license transition (grant or
+            revert) as an explicit heap event, so level changes apply at
+            their boundary even while the pool is idle."""
+            nxt = self.domains[pool].next_event(t)
+            if nxt is not None:
+                push(nxt, "freq", pool)
 
         def wake(pool: str, t: float):
             if pool in idle:
@@ -198,6 +250,10 @@ class Engine:
         win_start = 0.0
         win_busy = {"heavy": 0.0, "light": 0.0}
         win_handoffs = 0
+        # reduced-frequency time per pool at window start: the delta
+        # over the window is the MEASURED license residency the
+        # adaptive policy sizes pools from
+        win_reduced = {p: d.reduced_time() for p, d in self.domains.items()}
         last_t = 0.0
 
         def transfer(reqs: List[Request], src: str, target: str, t: float):
@@ -219,12 +275,16 @@ class Engine:
             push(t, "deliver", (target, list(reqs)))
 
         def maybe_resize(t: float):
-            nonlocal win_start, win_handoffs, win_busy
+            nonlocal win_start, win_handoffs, win_busy, win_reduced
             window = t - win_start
             if window < cfg.resize_interval_ms:
                 return
             busy = win_busy["heavy"] + win_busy["light"]
             total = sum(n_units.values())
+            heavy_pools = self.topo.pools_with(WorkKind.HEAVY)
+            reduced = sum(
+                self.domains[p.name].reduced_time()
+                - win_reduced.get(p.name, 0.0) for p in heavy_pools)
             sig = LoadSignals(
                 heavy_share=win_busy["heavy"] / busy if busy else 0.0,
                 light_share=win_busy["light"] / busy if busy else 0.0,
@@ -232,12 +292,15 @@ class Engine:
                 type_changes_per_s=2e3 * win_handoffs / window,
                 heavy_residency=min(
                     win_busy["heavy"] / window / max(
-                        sum(n_units[p.name] for p in
-                            self.topo.pools_with(WorkKind.HEAVY)), 1),
+                        sum(n_units[p.name] for p in heavy_pools), 1),
                     1.0),
+                license_residency=min(
+                    reduced / window / max(len(heavy_pools), 1), 1.0),
                 window_ms=window)
             win_start, win_handoffs = t, 0
             win_busy = {"heavy": 0.0, "light": 0.0}
+            win_reduced = {p: d.reduced_time()
+                           for p, d in self.domains.items()}
             new = self.policy.resize(self.topo, sig)
             if new is None:
                 return
@@ -311,6 +374,18 @@ class Engine:
                 active[target].extend(reqs)
                 wake(target, t)
                 continue
+            if kind == "freq":
+                # explicit license transition (grant or revert) at its
+                # boundary — applied even while the pool is idle, so
+                # residency timelines and transition counts are exact
+                d = self.domains[payload]
+                d.advance(t)
+                if orc is not None:
+                    fn = getattr(orc, "on_freq", None)
+                    if fn is not None:
+                        fn(t, payload, d)
+                sched_freq(payload, t)
+                continue
             pool: str = payload
             free_at = step(pool, t)
             if free_at is None:
@@ -319,8 +394,11 @@ class Engine:
                 idle.add(pool)
             else:
                 push(free_at, "step", pool)
+            sched_freq(pool, t)
 
         m.total_ms = horizon if horizon != float("inf") else last_t
+        for name, d in self.domains.items():
+            m.pool_freq[name] = d.snapshot()
         if orc is not None:
             orc.on_end(m)
         return m
@@ -335,13 +413,21 @@ class Engine:
         if self.oracle is not None:
             self.oracle.on_prefill(t, pool, r, waiting)
         chunk = min(cfg.prefill_chunk, r.prompt_len - r.prefilled)
+        d = self.domains[pool]
         if self.executor is not None:
+            # measured wall time: drive the license state machine for
+            # residency accounting but never stretch a real duration
             dur = self.executor.prefill(r, chunk, pool, ndev)
+            end = d.observe(t, dur, d.cfg.max_level, dense=True)
         else:
+            # heavy section: requests/refreshes the pool's license and
+            # runs through the domain (only the grant-window throttle
+            # can extend it — the roofline prefill time is already the
+            # licensed speed)
             dur = model.prefill_ms(chunk, ndev)
+            end = d.heavy_section(t, dur)
         r.prefilled += chunk
-        end = t + dur
-        charge(pool, "heavy", dur)
+        charge(pool, "heavy", end - t)
         if r.prefilled >= r.prompt_len:
             heapq.heappop(waiting)
             r.ttft_ms = end - r.arrive_ms
@@ -362,24 +448,38 @@ class Engine:
             else:
                 # KV handoff: the source pool drives the copy, so the
                 # handoff time extends ITS busy window (one count, one
-                # charge — per actual pool transfer)
-                end += model.handoff_ms
-                charge(pool, "heavy", model.handoff_ms)
-                transfer([r], pool, target, end)
+                # charge — per actual pool transfer). The copy is light
+                # work through the pool's domain: right after a prefill
+                # the license is still down, so it too runs slow (on the
+                # modeled path only — with a live executor nothing is
+                # stretched).
+                if self.executor is not None:
+                    hand_end = d.observe(end, model.handoff_ms)
+                else:
+                    hand_end = d.light_section(end, model.handoff_ms)
+                charge(pool, "heavy", hand_end - end)
+                transfer([r], pool, target, hand_end)
+                end = hand_end
         return end
 
     def _decode_round(self, pool: str, ndev: int, t: float, active,
                       m: ServeMetrics, charge) -> float:
         cfg, model = self.cfg, self.model
         batch = active[pool][:cfg.decode_batch_max]
+        d = self.domains[pool]
         if self.executor is not None:
+            # measured wall time: residency accounting only
             dur = self.executor.decode(batch, pool, ndev)
+            end = d.observe(t, dur)
         else:
+            # light section: a decode round inside the hysteresis window
+            # after a prefill runs at the reduced frequency — the
+            # trailing slowdown the specialization removes, now emergent
             dur = model.decode_ms(len(batch), ndev)
-        end = t + dur
+            end = d.light_section(t, dur)
         if self.oracle is not None:
             self.oracle.on_decode(t, end, pool, batch)
-        charge(pool, "light", dur)
+        charge(pool, "light", end - t)
         still = []
         for r in batch:
             r.generated += 1

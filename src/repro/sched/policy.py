@@ -32,11 +32,26 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.adaptive import AdaptiveConfig
 from repro.core.adaptive import AdaptivePolicy as AdaptiveEstimator
+from repro.sched.freq import FreqDomainConfig
 from repro.sched.topology import Pool, Topology, WorkKind
 
-# Deadline penalty added to light work on dedicated heavy pools — the
-# same large-constant trick MuQSS uses for idle-priority tasks.
-LIGHT_PENALTY = 1e12
+
+def light_penalty(freq: FreqDomainConfig = FreqDomainConfig()) -> float:
+    """Deadline penalty added to light work on dedicated heavy pools —
+    the MuQSS idle-priority trick, but derived from the frequency
+    domain instead of a magic constant: the worst-case slowdown ratio
+    (f0 / f_min) integrated over one full request + hysteresis cycle,
+    scaled 1e6x past any virtual deadline either mechanism generates.
+    Light work on a heavy pool therefore only ever wins when no
+    heavy-eligible work exists anywhere — exactly the asymmetric rule."""
+    ratio = freq.freqs_ghz[0] / min(freq.freqs_ghz)
+    window = freq.detect_delay + freq.grant_delay + freq.hysteresis
+    return ratio * window * 1e6
+
+
+# Derived for the default (paper) domain; ~3.7e9 deadline units — vast
+# against the ~3e6 µs simulations but traceable to license physics.
+LIGHT_PENALTY = light_penalty()
 
 
 @dataclass(frozen=True)
@@ -62,6 +77,10 @@ class LoadSignals:
     utilization: float = 0.0          # busy-time / (wall * n_units)
     type_changes_per_s: float = 0.0
     heavy_residency: float = 0.0      # wall-clock fraction heavy is live
+    # MEASURED fraction of the window the heavy pools' frequency
+    # domains executed below L0 (repro.sched.freq residency counters);
+    # 0.0 when the mechanism has no domains to measure
+    license_residency: float = 0.0
     window_ms: float = 0.0
 
 
@@ -274,9 +293,14 @@ class AdaptivePolicy(Policy):
             self._estimator = AdaptiveEstimator(self.cfg, n_units)
         est = self._estimator
         est.state.n_avx_cores = heavy.n_units
+        # size on the MEASURED license residency when the mechanism
+        # reports one (the engine's per-pool frequency domains); fall
+        # back to the heavy-share heuristic for domain-less mechanisms
+        l2 = signals.license_residency \
+            if signals.license_residency > 0.0 else signals.heavy_residency
         state = est.update(scalar_share=signals.light_share,
                            heavy_share=st.ema_heavy,
-                           l2_residency=signals.heavy_residency,
+                           l2_residency=l2,
                            type_changes_per_s=signals.type_changes_per_s)
         if not state.enabled:
             # §4.3: cost exceeds benefit — fall back toward the minimal

@@ -35,7 +35,15 @@ Invariants checked by the oracle (the engine's contract):
                        or is eligible for waiting work;
   progress sanity      no decode (hence no completion) before prefill
                        finishes; token timestamps are monotone, so
-                       inter-token latencies are non-negative.
+                       inter-token latencies are non-negative;
+  freq-cap             a pool's frequency domain never executes above
+                       the granted license level's frequency cap;
+  freq-revert          a license revert never occurs earlier than
+                       ``hysteresis`` after the last dense heavy
+                       section that scheduled it;
+  freq-residency       per-pool frequency residency integrals sum to
+                       the pool's charged busy time (no unaccounted
+                       wall time at any level).
 """
 from __future__ import annotations
 
@@ -144,6 +152,51 @@ class EngineOracle:
                            f"resident on {resident!r} (transfer "
                            f"without handoff)")
 
+    def on_freq(self, t: float, pool: str, domain):
+        """Explicit license-transition event: the instantaneous speed
+        must never exceed the granted level's frequency cap."""
+        cap = domain.cfg.freqs_ghz[domain.level]
+        v = domain.speed_ghz(t)
+        if v > cap + 1e-9:
+            self._flag("freq-cap", t,
+                       f"pool {pool!r} at {v} GHz above level-"
+                       f"{domain.level} cap {cap} GHz")
+
+    def _check_domains(self, m):
+        """The three frequency invariants, audited from each pool
+        domain's recorded trace at end of run."""
+        for pool, d in getattr(self._engine, "domains", {}).items():
+            cfg = d.cfg
+            for t0, t1, level, pending, v_ghz in d.sections:
+                # cap of the GRANTED level; a pending (deeper) license
+                # throttles below it, so any excursion above is a bug
+                if v_ghz > cfg.freqs_ghz[level] + 1e-9:
+                    self._flag("freq-cap", t0,
+                               f"pool {pool!r} ran at {v_ghz} GHz with "
+                               f"level {level} granted "
+                               f"(cap {cfg.freqs_ghz[level]})")
+            for ev in d.events:
+                if ev[0] != "revert":
+                    continue
+                _, t_rev, _frm, heavy_end = ev
+                if t_rev < heavy_end + cfg.hysteresis - 1e-9:
+                    self._flag("freq-revert", t_rev,
+                               f"pool {pool!r} reverted {t_rev - heavy_end}"
+                               f" after last heavy section "
+                               f"(< hysteresis {cfg.hysteresis})")
+            res = sum(d.time_at_level)
+            pb = m.pool_busy.get(pool, {})
+            busy = sum(pb.values())
+            tol = max(1e-3, 1e-6 * busy)
+            if abs(res - d.busy_time) > tol:
+                self._flag("freq-residency", m.total_ms,
+                           f"pool {pool!r} residency sum {res} != domain "
+                           f"busy time {d.busy_time}")
+            if pb and abs(res - busy) > tol:
+                self._flag("freq-residency", m.total_ms,
+                           f"pool {pool!r} residency sum {res} != charged "
+                           f"busy {busy}")
+
     def on_idle(self, t: float, pool: str, n_waiting: int, n_active: int):
         if n_active > 0:
             self._flag("work-conservation", t,
@@ -155,6 +208,7 @@ class EngineOracle:
                        f"heavy-eligible requests")
 
     def on_end(self, m):
+        self._check_domains(m)
         if m.handoffs != self._transfers:
             self._flag("handoff", m.total_ms,
                        f"handoffs counted {m.handoffs} != transfers "
@@ -234,6 +288,7 @@ def replay_engine(trace: Trace, policy_name: str, *, n_devices: int = 16,
         "policy": policy_name,
         "topology": topo.to_dict(),
         "metrics": s,
+        "freq": dict(m.pool_freq),     # per-pool frequency-domain trace
         "n_violations": oracle.n_violations,
         "violations": oracle.violations,
     }
@@ -304,6 +359,9 @@ def matrix_rows(matrix: Dict) -> List[str]:
                 f"itl_p99={s['itl_p99_ms']:8.1f}ms "
                 f"spread={s['itl_spread_ms']:8.1f}ms "
                 f"done={s['completed']:4d} "
+                f"f={s['avg_freq_ghz']:.2f}GHz "
+                f"thr={s['throttled_ms']:5.1f}ms "
+                f"E={s['energy_proxy']:8.0f} "
                 f"violations={run['n_violations']}")
         d = cell.get("derived")
         if d:
@@ -328,6 +386,11 @@ def main(argv=None) -> int:
                     help="skip the OS-simulator leg of the differential")
     ap.add_argument("--out", type=Path, default=None,
                     help="write the full metrics matrix as JSON")
+    ap.add_argument("--freq-trace", type=Path, default=None,
+                    help="write just the per-pool frequency-domain "
+                         "trace (scenario x policy x pool residency / "
+                         "transitions / energy) as JSON — the CI "
+                         "artifact")
     args = ap.parse_args(argv)
     duration = args.duration or (8_000.0 if args.smoke else 30_000.0)
     matrix = scenario_matrix(
@@ -341,6 +404,15 @@ def main(argv=None) -> int:
         args.out.parent.mkdir(parents=True, exist_ok=True)
         args.out.write_text(json.dumps(matrix, indent=1, sort_keys=True))
         print(f"matrix -> {args.out}")
+    if args.freq_trace:
+        trace = {
+            name: {pol: run["freq"]
+                   for pol, run in cell["engine"].items()}
+            for name, cell in matrix.items() if not name.startswith("_")}
+        args.freq_trace.parent.mkdir(parents=True, exist_ok=True)
+        args.freq_trace.write_text(
+            json.dumps(trace, indent=1, sort_keys=True))
+        print(f"freq trace -> {args.freq_trace}")
     n_bad = total_violations(matrix)
     if n_bad:
         print(f"ORACLE VIOLATIONS: {n_bad}")

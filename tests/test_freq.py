@@ -1,0 +1,378 @@
+"""Unified frequency-domain layer (repro.sched.freq).
+
+Edge cases of the license state machine (a heavy section arriving while
+a revert is pending, a level-up request racing a level-down grant,
+back-to-back heavy sections straddling the hysteresis boundary),
+property-style invariants via the hypothesis stub, the engine's
+emergent trailing-work slowdown, the replay oracle's three frequency
+checks, and a pinned per-pool frequency-trace fixture.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    # direct `python -m tests.test_freq` run (fixture regeneration)
+    # without conftest.py having installed the stub
+    from tests._hypothesis_stub import install
+    install()
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+from repro.sched.freq import (ENGINE_FREQ_MS, FreqDomainConfig,
+                              FrequencyDomain)
+
+# deterministic domain for the state-machine tests: no detection delay,
+# no throttle slowdown — boundaries land on round numbers
+CFG = FreqDomainConfig(grant_delay=500.0, hysteresis=2000.0,
+                       detect_delay=0.0, throttle_factor=1.0)
+F = CFG.freqs_ghz
+
+
+def _run(d, t, dur, level, dense=True):
+    """Execute `dur` time units of level-`level` work (cycles at that
+    level's frequency)."""
+    return d.execute(t, F[level] * CFG.cycles_per_ghz * dur, level, dense)
+
+
+# ------------------------------------------------------- edge cases
+
+
+def test_heavy_section_while_revert_pending_refreshes_hysteresis():
+    """A new dense heavy section arriving before the scheduled revert
+    cancels it and restarts the hysteresis — no extra grant is paid."""
+    d = FrequencyDomain(CFG)
+    t = _run(d, 0.0, 600.0, 2)                 # past the grant window
+    assert d.level == 2
+    assert d.revert_at == pytest.approx(t + 2000.0)
+    t2 = _run(d, t + 1500.0, 10.0, 2)          # inside the hysteresis
+    assert d.level == 2 and d.pending is None
+    assert d.revert_at == pytest.approx(t2 + 2000.0)
+    assert d.transitions == 1                  # the one original grant
+
+
+def test_revert_races_pending_grant():
+    """A heavy section shorter than the grant window schedules its
+    revert while the grant is still pending: the grant must fire first
+    (at its boundary), the revert after the full hysteresis."""
+    d = FrequencyDomain(CFG)
+    end = _run(d, 0.0, 100.0, 2)               # ends before grant_at=500
+    assert end == pytest.approx(100.0)
+    assert d.pending == 2 and d.level == 0
+    assert d.revert_at == pytest.approx(end + 2000.0)
+    assert d.speed_ghz(600.0) == F[2]          # grant applied at 500
+    assert d.level == 2
+    assert d.speed_ghz(end + 2000.0 + 1.0) == F[0]   # revert at 2100
+    assert [e[0] for e in d.events] == ["request", "grant", "revert"]
+    grant, revert = d.events[1], d.events[2]
+    assert grant[1] == pytest.approx(500.0)
+    assert revert[1] == pytest.approx(end + 2000.0)
+
+
+def test_deeper_request_supersedes_pending_shallow_grant():
+    """An AVX-512-class section arriving while an AVX2-class license is
+    still pending upgrades the request (level-down races merge; the
+    state machine never grants a stale shallower level last)."""
+    d = FrequencyDomain(CFG)
+    _run(d, 0.0, 10.0, 1)
+    assert d.pending == 1
+    _run(d, 10.0, 10.0, 2)
+    assert d.pending == 2
+    d.advance(1000.0)
+    assert d.level == 2 and d.transitions == 1
+
+
+def test_back_to_back_heavy_straddling_hysteresis_boundary():
+    """Heavy work arriving just after the hysteresis boundary pays the
+    full grant again; arriving just before, it keeps the license."""
+    d = FrequencyDomain(CFG)
+    t = _run(d, 0.0, 600.0, 2)
+    t2 = t + 2000.0 + 1.0                      # 1 unit past the boundary
+    assert d.speed_ghz(t2) == F[0]
+    _run(d, t2, 600.0, 2)
+    kinds = [e[0] for e in d.events]
+    assert kinds == ["request", "grant", "revert", "request", "grant"]
+
+    d2 = FrequencyDomain(CFG)
+    t = _run(d2, 0.0, 600.0, 2)
+    _run(d2, t + 2000.0 - 1.0, 10.0, 2)        # 1 unit before the boundary
+    assert [e[0] for e in d2.events] == ["request", "grant"]
+    assert d2.level == 2 and d2.transitions == 1
+
+
+def test_sparse_heavy_does_not_sustain_license():
+    """Sparse heavy sections neither request nor refresh (paper §3.3)."""
+    d = FrequencyDomain(CFG)
+    t = _run(d, 0.0, 600.0, 2)
+    _run(d, t + 100.0, 10.0, 2, dense=False)   # sparse: no refresh
+    assert d.revert_at == pytest.approx(t + 2000.0)
+    assert d.speed_ghz(t + 2000.0 + 1.0) == F[0]
+
+
+# ------------------------------------------------- property invariants
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(min_value=1.0, max_value=500.0),
+                          st.integers(0, 2), st.booleans()),
+                min_size=1, max_size=30),
+       st.floats(min_value=0.0, max_value=50.0))
+def test_residency_caps_and_revert_invariants(sections, gap):
+    """Any section sequence: (1) residency integrals sum to busy time,
+    (2) speed never exceeds the granted level's cap, (3) no revert
+    earlier than hysteresis after the heavy section that scheduled it."""
+    d = FrequencyDomain(CFG, record=True)
+    t, busy = 0.0, 0.0
+    for dur, lvl, dense in sections:
+        t2 = _run(d, t, dur, lvl, dense)
+        busy += t2 - t
+        t = t2 + gap
+    assert sum(d.time_at_level) == pytest.approx(d.busy_time, rel=1e-9)
+    assert d.busy_time == pytest.approx(busy, rel=1e-9)
+    for t0, t1, lvl, _pending, v_ghz in d.sections:
+        assert v_ghz <= CFG.freqs_ghz[lvl] + 1e-9
+        assert t1 >= t0
+    for ev in d.events:
+        if ev[0] == "revert":
+            assert ev[1] >= ev[3] + CFG.hysteresis - 1e-9
+    assert min(F) - 1e-9 <= d.avg_freq_ghz() <= F[0] + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(min_value=1.0, max_value=3000.0),
+       st.floats(min_value=0.0, max_value=3000.0))
+def test_light_work_never_faster_than_nominal(dur, delay):
+    """A light section takes at least its nominal duration, and at most
+    the worst-case slowdown f0/f_min (+ throttle) of it."""
+    d = FrequencyDomain(CFG)
+    t0 = _run(d, 0.0, 300.0, 2)                # drop the license
+    start = t0 + delay
+    end = d.light_section(start, dur)
+    took = end - start
+    assert took >= dur - 1e-9
+    assert took <= dur * (F[0] / min(F)) / CFG.throttle_factor + 1e-9
+
+
+def test_engine_ms_domain_energy_monotone_in_heavy_share():
+    """The energy proxy charges heavy sections more than light ones of
+    equal duration (heavy_power_factor x the DVFS f^3 term)."""
+    heavy, light = (FrequencyDomain(ENGINE_FREQ_MS) for _ in range(2))
+    heavy.heavy_section(0.0, 10.0)
+    light.light_section(0.0, 10.0)
+    assert heavy.energy > 0.0 and light.energy > 0.0
+    assert heavy.energy > heavy.busy_time * (min(F) / F[0]) ** 3
+    assert light.energy == pytest.approx(light.busy_time)
+
+
+def test_reduced_time_does_not_double_count_throttle_window():
+    """Throttle-window spans live in time_at_level[pending]; residency
+    must never exceed busy time (a double-count once pushed it to 1.8x)."""
+    d = FrequencyDomain(CFG)
+    _run(d, 0.0, 600.0, 2)                     # 500 of these throttled
+    assert d.throttled_time == pytest.approx(500.0)
+    assert d.reduced_time() == pytest.approx(600.0)
+    assert d.reduced_time() <= d.busy_time + 1e-9
+
+
+def test_observe_attributes_residency_without_stretching():
+    """observe(): measured durations drive the state machine and the
+    residency/energy accounting but are never altered."""
+    d = FrequencyDomain(ENGINE_FREQ_MS)
+    end = d.observe(0.0, 10.0, 2, dense=True)
+    assert end == pytest.approx(10.0)          # exactly the measured dur
+    assert d.revert_at == pytest.approx(10.0 + ENGINE_FREQ_MS.hysteresis)
+    e2 = d.observe(end, 5.0)                   # light, spans the revert
+    assert e2 == pytest.approx(15.0)           # still not stretched
+    assert d.reduced_time() > 0.0              # residency attributed
+    assert sum(d.time_at_level) == pytest.approx(d.busy_time)
+    assert d.revert_at is None                 # revert fired mid-span
+
+
+def test_engine_executor_durations_not_stretched():
+    """With a live executor the engine reports exactly the measured
+    wall times: a decode right after a prefill is NOT stretched by the
+    hysteresis model (the real measurement already contains reality)."""
+    from repro.sched import SharedBaselinePolicy, Topology
+    from repro.sched.engine import Engine, PoolModel, Request
+
+    class FixedExecutor:
+        def prefill(self, r, chunk, pool, ndev):
+            return 50.0
+
+        def decode(self, batch, pool, ndev):
+            return 4.0
+
+    eng = Engine(Topology.shared(1), SharedBaselinePolicy(), PoolModel(),
+                 executor=FixedExecutor())
+    m = eng.run([Request(rid=0, arrive_ms=0.0, prompt_len=1024,
+                         max_new=4)], 10_000.0)
+    assert all(itl == pytest.approx(4.0) for itl in m.itl_ms), m.itl_ms
+    # the domain still attributed the license residency for reporting
+    assert m.pool_freq["shared"]["reduced"] > 0.0
+
+
+def test_core_modules_importable_standalone():
+    """Entry-point order must not matter: importing core.adaptive (or
+    core.license) as the FIRST repro module in a process must not trip
+    the core <-> sched import cycle."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    for mod in ("repro.core.adaptive", "repro.core.license",
+                "repro.sched.freq", "repro.sched"):
+        r = subprocess.run([sys.executable, "-c", f"import {mod}"],
+                           capture_output=True, text=True, env=env)
+        assert r.returncode == 0, (mod, r.stderr)
+
+
+# ------------------------------------------- emergent engine behaviour
+
+
+def test_decode_inside_hysteresis_window_runs_slow():
+    """Single shared pool: the decode round right after a prefill lands
+    inside the 2 ms hysteresis and is stretched by the reduced license
+    level — the trailing-work slowdown is emergent, not a constant."""
+    from repro.sched import SharedBaselinePolicy, Topology
+    from repro.sched.engine import Engine, PoolModel, Request
+    pm = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=4.0,
+                   decode_ms_per_seq=0.1)
+    eng = Engine(Topology.shared(1), SharedBaselinePolicy(), pm)
+    m = eng.run([Request(rid=0, arrive_ms=0.0, prompt_len=1024,
+                         max_new=4)], 10_000.0)
+    nominal = pm.decode_ms(1, 1)
+    assert m.itl_ms[0] > nominal * 1.05, (m.itl_ms, nominal)
+    # once the license reverts, later rounds run at nominal speed
+    assert m.itl_ms[-1] == pytest.approx(nominal)
+    assert m.pool_freq["shared"]["transitions"] >= 2
+
+
+def test_specialized_decode_pool_stays_at_full_frequency():
+    """Under the specialized split the decode pool never executes heavy
+    work, so its frequency domain never leaves L0 — zero reduced time,
+    zero transitions, full-clock average."""
+    from repro.sched import SpecializedPolicy, Topology
+    from repro.sched.engine import Engine, PoolModel
+    from repro.sched.workload import poisson_workload
+    pm = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
+                   decode_ms_per_seq=24.0)
+    wl = poisson_workload(3.2, 20_000, prompt_len=2048, max_new=64, seed=5)
+    m = Engine(Topology.serving(16, 4), SpecializedPolicy(), pm).run(
+        wl, 20_000)
+    dec = m.pool_freq["decode"]
+    assert dec["reduced"] == 0.0
+    assert dec["transitions"] == 0
+    assert dec["avg_freq_ghz"] == pytest.approx(ENGINE_FREQ_MS.freqs_ghz[0])
+    # while the prefill pool's domain did hold licenses
+    assert m.pool_freq["prefill"]["reduced"] > 0.0
+
+
+def test_shared_engine_summary_reports_lower_frequency():
+    """The heavy-vs-light gap traces to the domain: the shared setup
+    shows reduced-frequency residency in its summary, the specialized
+    decode pool does not."""
+    from repro.sched import (SharedBaselinePolicy, SpecializedPolicy,
+                             Topology)
+    from repro.sched.engine import Engine, PoolModel
+    from repro.sched.workload import poisson_workload
+    pm = PoolModel(prefill_ms_per_ktok=320.0, decode_fixed_ms=760.0,
+                   decode_ms_per_seq=24.0)
+    wl = poisson_workload(3.2, 20_000, prompt_len=2048, max_new=64, seed=5)
+    ns = Engine(Topology.shared(16), SharedBaselinePolicy(), pm).run(
+        list(wl), 20_000).summary()
+    assert 0.0 < ns["license_residency"] < 1.0
+    assert ns["avg_freq_ghz"] < ENGINE_FREQ_MS.freqs_ghz[0]
+    assert ns["freq_transitions"] > 0
+    assert ns["energy_proxy"] > 0
+
+
+# ---------------------------------------------- oracle frequency checks
+
+
+def test_oracle_flags_frequency_violations():
+    """The three frequency invariants are not rubber stamps: a forged
+    domain trace (over-cap speed, premature revert, residency hole)
+    fires all of them."""
+    from repro.sched import SpecializedPolicy, Topology
+    from repro.sched.engine import Engine, PoolModel, ServeMetrics
+    from repro.sched.replay import EngineOracle
+
+    orc = EngineOracle()
+    eng = Engine(Topology.serving(4, 1), SpecializedPolicy(), PoolModel())
+    orc.bind(eng)
+    d = FrequencyDomain(ENGINE_FREQ_MS, record=True)
+    d.sections.append((0.0, 1.0, 2, None, 99.0))     # above the L2 cap
+    d.events.append(("revert", 10.0, 2, 9.5))        # 0.5 < hysteresis
+    d.busy_time = 123.0                              # residency hole
+    eng.domains = {"prefill": d}
+    m = ServeMetrics()
+    m.pool_busy = {"prefill": {"heavy": 50.0, "light": 0.0}}
+    m.total_ms = 100.0
+    orc._check_domains(m)
+    checks = {v["check"] for v in orc.violations}
+    assert {"freq-cap", "freq-revert", "freq-residency"} <= checks
+
+
+def test_replay_runs_clean_under_every_policy():
+    """The frequency invariants hold with zero violations for every
+    registered policy on a real trace (acceptance gate)."""
+    from repro.sched import registered_policies
+    from repro.sched.replay import replay_engine
+    from repro.sched.workload import scenario_trace
+    trace = scenario_trace("bursty", duration_ms=8_000.0, seed=7)
+    for pol in registered_policies():
+        run = replay_engine(trace, pol)
+        assert run["n_violations"] == 0, (pol, run["violations"][:3])
+        assert run["freq"], pol                      # trace recorded
+
+
+# ------------------------------------------------------ pinned fixture
+
+FIXTURE = Path(__file__).parent / "fixtures" / "freq_trace_steady.json"
+
+
+def _round(v):
+    if isinstance(v, float):
+        return round(v, 3)
+    if isinstance(v, list):
+        return [_round(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _round(x) for k, x in v.items()}
+    return v
+
+
+def current_freq_fixture():
+    """The tiny pinned frequency trace: one short steady-scenario replay
+    under the specialized policy, per-pool domain snapshots rounded to
+    3 decimals. Regenerate with
+    ``python -m tests.test_freq`` (writes the fixture file)."""
+    from repro.sched.replay import replay_engine
+    from repro.sched.workload import scenario_trace
+    trace = scenario_trace("steady", duration_ms=4_000.0, seed=0)
+    run = replay_engine(trace, "specialized", n_devices=8,
+                        prefill_devices=2)
+    return _round(run["freq"])
+
+
+def test_pinned_frequency_trace_fixture():
+    """Regression pin: the per-pool frequency trace of a short canonical
+    replay matches the committed fixture exactly (results/ is
+    regeneratable and gitignored; this fixture is the one blessed
+    artifact)."""
+    assert FIXTURE.exists(), "fixture missing — regenerate via " \
+        "python -m tests.test_freq"
+    pinned = json.loads(FIXTURE.read_text())
+    assert pinned == current_freq_fixture()
+
+
+if __name__ == "__main__":           # fixture (re)generation
+    FIXTURE.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE.write_text(json.dumps(current_freq_fixture(), indent=1,
+                                  sort_keys=True) + "\n")
+    print(f"wrote {FIXTURE}")
