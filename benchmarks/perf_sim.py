@@ -1,0 +1,243 @@
+"""Simulator-throughput benchmark: the `perf` target of benchmarks/run.py.
+
+Measures simulated-time-per-wall-second for the OS simulator in both
+execution modes — legacy 25 µs chunked stepping (``strict_chunks=True``)
+and event-horizon execution (the default) — across:
+
+  * every registered serving scenario (repro.sched.workload.SCENARIOS)
+    replayed through ``run_trace_sim`` under the shared and specialized
+    layouts, and
+  * the paper's webserver workloads (the fig5/fig6 operating point),
+    where long scalar/crypto segments make chunked stepping most
+    expensive;
+
+plus the wall time of the full differential scenario matrix
+(``repro.sched.replay.scenario_matrix``) serial vs. fanned out across a
+process pool over the shared frozen traces.
+
+Writes ``BENCH_simulator.json`` — the benchmark trajectory artifact.
+Wall-clock numbers are machine-dependent; the *event counts* per mode
+are deterministic, so the regression gate (``--check-baseline``)
+compares (a) the measured chunked->horizon speedup ratio against the
+committed baseline ratio (machine-independent to first order: both
+modes run on the same host) and (b) the deterministic horizon event
+counts, failing on a >30% regression of either.
+
+  PYTHONPATH=src python benchmarks/run.py perf --smoke \
+      --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+from pathlib import Path
+
+REGRESSION_TOLERANCE = 0.30     # fail if >30% worse than baseline
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _workloads(smoke: bool):
+    """(name, runner(strict) -> result-dict-with sim_us/events_processed)."""
+    from repro.core.experiments import run_trace_sim, run_webserver
+    from repro.sched.workload import SCENARIOS, scenario_trace
+
+    duration_ms = 60_000.0 if smoke else 300_000.0
+    web_us = 200_000.0 if smoke else 1_000_000.0
+    out = []
+    for name in sorted(SCENARIOS):
+        trace = scenario_trace(name, duration_ms=duration_ms, seed=0)
+        for spec in (False, True):
+            label = f"trace/{name}/{'specialized' if spec else 'shared'}"
+            out.append((label, lambda s, tr=trace, sp=spec: run_trace_sim(
+                tr, sp, strict_chunks=s)))
+    for isa, spec in (("avx512", False), ("avx512", True), ("sse4", False)):
+        label = f"webserver/{isa}/{'specialized' if spec else 'shared'}"
+        out.append((label, lambda s, i=isa, sp=spec: dict(
+            run_webserver(i, sp, sim_us=web_us, strict_chunks=s),
+            sim_us=web_us)))
+    return out
+
+
+def run_bench(smoke: bool = False, parallel: int = 0,
+              matrix: bool = True) -> dict:
+    rows = {}
+    for label, runner in _workloads(smoke):
+        cell = {}
+        for mode, strict in (("chunked", True), ("horizon", False)):
+            res, wall = _time(lambda: runner(strict))
+            sim_us = res["sim_us"]
+            cell[mode] = {
+                "wall_s": round(wall, 4),
+                "sim_us": sim_us,
+                "events": res["events_processed"],
+                "sim_us_per_wall_s": round(sim_us / max(wall, 1e-9), 1),
+                "events_per_sim_s": round(
+                    res["events_processed"] / (sim_us / 1e6), 1),
+            }
+        cell["speedup"] = round(
+            cell["chunked"]["wall_s"] / max(cell["horizon"]["wall_s"], 1e-9),
+            2)
+        cell["event_reduction"] = round(
+            cell["chunked"]["events"] / max(cell["horizon"]["events"], 1), 1)
+        rows[label] = cell
+
+    # the replay matrix: serial vs. process-pool fan-out (skippable —
+    # the CSV rows() path discards it)
+    matrix_cell = None
+    if matrix:
+        from repro.sched.replay import scenario_matrix
+        n_workers = parallel or (os.cpu_count() or 2)
+        duration = 8_000.0 if smoke else 30_000.0
+        kw = dict(duration_ms=duration, n_devices=8 if smoke else 16,
+                  prefill_devices=2 if smoke else 4)
+        _, wall_serial = _time(lambda: scenario_matrix(**kw))
+        _, wall_par = _time(lambda: scenario_matrix(parallel=n_workers,
+                                                    **kw))
+        matrix_cell = {
+            "duration_ms": duration,
+            "workers": n_workers,
+            "wall_s_serial": round(wall_serial, 3),
+            "wall_s_parallel": round(wall_par, 3),
+            "parallel_speedup": round(
+                wall_serial / max(wall_par, 1e-9), 2),
+        }
+
+    speedups = [c["speedup"] for c in rows.values()]
+    aggregate = {
+        "speedup_geomean": round(
+            math.exp(sum(math.log(max(s, 1e-9)) for s in speedups)
+                     / len(speedups)), 2),
+        "speedup_min": min(speedups),
+        "speedup_max": max(speedups),
+        "horizon_events_total": sum(
+            c["horizon"]["events"] for c in rows.values()),
+        "horizon_sim_us_per_wall_s": round(
+            sum(c["horizon"]["sim_us"] for c in rows.values())
+            / max(sum(c["horizon"]["wall_s"] for c in rows.values()),
+                  1e-9), 1),
+        "chunked_sim_us_per_wall_s": round(
+            sum(c["chunked"]["sim_us"] for c in rows.values())
+            / max(sum(c["chunked"]["wall_s"] for c in rows.values()),
+                  1e-9), 1),
+    }
+    return {"config": {"smoke": smoke}, "workloads": rows,
+            "matrix": matrix_cell, "aggregate": aggregate}
+
+
+def check_baseline(result: dict, baseline: dict) -> list:
+    """Compare a fresh run against the committed trajectory point.
+    Returns a list of human-readable failures (empty = pass).
+
+    Accepts either baseline shape: the committed two-section file
+    ({"smoke": ..., "full": ...}, written by --update-baseline) or a
+    flat single-run result (written by --out, e.g. a promoted CI
+    artifact) — in the flat case the run's own config decides which
+    section it is."""
+    fails = []
+    key = "smoke" if result["config"]["smoke"] else "full"
+    if "workloads" in baseline:        # flat single-run result
+        base_key = "smoke" if baseline.get("config", {}).get("smoke") \
+            else "full"
+        if base_key != key:
+            return [f"baseline is a flat {base_key!r} run but this is a "
+                    f"{key!r} run"]
+        base = baseline
+    else:
+        base = baseline.get(key)
+    if base is None:
+        return [f"baseline has no {key!r} section"]
+    b_agg, r_agg = base["aggregate"], result["aggregate"]
+    floor = b_agg["speedup_geomean"] * (1.0 - REGRESSION_TOLERANCE)
+    if r_agg["speedup_geomean"] < floor:
+        fails.append(
+            f"speedup geomean {r_agg['speedup_geomean']} < {floor:.2f} "
+            f"(baseline {b_agg['speedup_geomean']} - {REGRESSION_TOLERANCE:.0%})")
+    ceil = b_agg["horizon_events_total"] * (1.0 + REGRESSION_TOLERANCE)
+    if r_agg["horizon_events_total"] > ceil:
+        fails.append(
+            f"horizon event count {r_agg['horizon_events_total']} > "
+            f"{ceil:.0f} (baseline {b_agg['horizon_events_total']} "
+            f"+ {REGRESSION_TOLERANCE:.0%}; events are deterministic — "
+            f"this is a real throughput regression, not noise)")
+    return fails
+
+
+def rows(smoke: bool = True):
+    """CSV rows for the benchmarks/run.py section protocol (skips the
+    matrix fan-out measurement — these rows do not report it)."""
+    result = run_bench(smoke=smoke, matrix=False)
+    for label, cell in result["workloads"].items():
+        yield (f"perf_{label}", cell["horizon"]["wall_s"] * 1e6,
+               f"speedup={cell['speedup']}x "
+               f"events={cell['event_reduction']}x")
+    agg = result["aggregate"]
+    yield ("perf_geomean", 0, f"speedup={agg['speedup_geomean']}x")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="short runs (CI gate)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write this run's result JSON here")
+    ap.add_argument("--check-baseline", type=Path, default=None,
+                    help="committed BENCH_simulator.json to gate against")
+    ap.add_argument("--update-baseline", type=Path, default=None,
+                    help="merge this run into the committed two-section "
+                         "baseline file (creates it if missing) — the "
+                         "supported way to re-pin the trajectory point")
+    ap.add_argument("--parallel", type=int, default=0,
+                    help="matrix fan-out workers (default: cpu count)")
+    args = ap.parse_args(argv)
+    result = run_bench(smoke=args.smoke, parallel=args.parallel)
+    for label, cell in result["workloads"].items():
+        print(f"{label:38s} chunked={cell['chunked']['wall_s']:8.3f}s "
+              f"horizon={cell['horizon']['wall_s']:8.3f}s "
+              f"speedup={cell['speedup']:5.1f}x "
+              f"events {cell['chunked']['events']:>8} -> "
+              f"{cell['horizon']['events']:>8}")
+    m = result["matrix"]
+    if m is not None:
+        print(f"{'matrix (serial -> parallel)':38s} "
+              f"{m['wall_s_serial']:8.3f}s -> {m['wall_s_parallel']:8.3f}s "
+              f"({m['workers']} workers, {m['parallel_speedup']}x)")
+    agg = result["aggregate"]
+    print(f"geomean speedup {agg['speedup_geomean']}x "
+          f"(min {agg['speedup_min']}x, max {agg['speedup_max']}x); "
+          f"sim-throughput {agg['chunked_sim_us_per_wall_s']:.0f} -> "
+          f"{agg['horizon_sim_us_per_wall_s']:.0f} sim-us/wall-s")
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(json.dumps(result, indent=1, sort_keys=True))
+        print(f"perf -> {args.out}")
+    if args.update_baseline:
+        path = args.update_baseline
+        sections = json.loads(path.read_text()) if path.exists() else {}
+        if "workloads" in sections:    # legacy flat file: start over
+            sections = {}
+        sections["smoke" if args.smoke else "full"] = result
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(sections, indent=1, sort_keys=True))
+        print(f"baseline -> {path}")
+    if args.check_baseline:
+        baseline = json.loads(args.check_baseline.read_text())
+        fails = check_baseline(result, baseline)
+        for f in fails:
+            print(f"PERF REGRESSION: {f}", file=sys.stderr)
+        if fails:
+            return 1
+        print("baseline check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,21 +3,40 @@ TPU-adaptation benches. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5,serving
+
+The ``perf`` target measures simulator throughput (chunked vs.
+event-horizon execution) and writes/gates the BENCH_simulator.json
+trajectory artifact (see benchmarks/perf_sim.py):
+
+  PYTHONPATH=src python benchmarks/run.py perf --smoke \
+      --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
 """
 import argparse
+import os
 import sys
 import traceback
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make the `benchmarks` package importable either way
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
 
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "perf":
+        # dedicated target with its own flags (--smoke/--out/
+        # --check-baseline); exits with the gate's status
+        from benchmarks import perf_sim
+        sys.exit(perf_sim.main(sys.argv[2:]))
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset: fig2,fig5,fig7,cohort,"
-                         "crypto,serving,roofline")
+                         "crypto,serving,roofline,perf")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import crypto_micro, figures, roofline_table
+    from benchmarks import crypto_micro, figures, perf_sim, roofline_table
     from benchmarks import serving_specialization
 
     sections = [
@@ -28,6 +47,7 @@ def main() -> None:
         ("crypto", crypto_micro.rows),
         ("serving", serving_specialization.rows),
         ("roofline", roofline_table.rows),
+        ("perf", lambda: perf_sim.rows(smoke=True)),
     ]
     print("name,us_per_call,derived")
     failed = 0

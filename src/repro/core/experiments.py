@@ -26,10 +26,13 @@ def run_webserver(isa: str, specialization: bool, *,
                   compressed: bool = True, sim_us: float = SIM_US,
                   n_cores: int = N_CORES, n_avx: int = N_AVX,
                   seed: int = 0, ipc_bonus: float = 0.007,
-                  policy: Optional[Policy] = None) -> Dict:
+                  policy: Optional[Policy] = None,
+                  strict_chunks: bool = False) -> Dict:
     """One webserver run through the shared repro.sched API: the core
     partition is an explicit Topology, the specialization decision an
-    explicit Policy (override `policy` to plug in a custom one)."""
+    explicit Policy (override `policy` to plug in a custom one).
+    strict_chunks replays with the legacy 25 µs chunked execution loop
+    (perf-benchmark baseline / differential debugging)."""
     wcfg = WebConfig(isa=isa, compressed=compressed, seed=seed,
                      n_conns=2 * n_cores)
     scfg = SchedConfig(n_cores=n_cores, n_avx_cores=n_avx,
@@ -39,7 +42,8 @@ def run_webserver(isa: str, specialization: bool, *,
                      else SharedBaselinePolicy())
     sim = Simulator(scfg, LicenseConfig(),
                     ipc_locality_bonus=ipc_bonus if specialization else 0.0,
-                    topology=topo, policy=pol)
+                    topology=topo, policy=pol,
+                    strict_chunks=strict_chunks)
     for task in webserver_tasks(wcfg):
         sim.add_task(task, 0.0)
     m = sim.run(sim_us)
@@ -53,6 +57,7 @@ def run_webserver(isa: str, specialization: bool, *,
         "p99_us": m.p(0.99),
         "counters": sim.counters(),
         "license": sim.license_snapshot(),
+        "events_processed": sim.events_processed,
         "flame_throttle": {"/".join(k): v
                            for k, v in m.flame_throttle.items()},
     }
@@ -133,12 +138,14 @@ def cohort_comparison(sim_us: float = 1_000_000.0) -> Dict[str, float]:
 
 def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
                   n_avx: int = 4, policy: Optional[Policy] = None,
-                  isa: str = "avx512", slack_us: float = 20_000.0) -> Dict:
+                  isa: str = "avx512", slack_us: float = 20_000.0,
+                  strict_chunks: bool = False) -> Dict:
     """Replay a serving trace (repro.sched.workload) through the OS
     simulator — the second mechanism of the differential replay harness.
     Arrival times are time-compressed (1 trace-ms == 1 sim-µs, see
     core/workloads.trace_tasks); the run extends ``slack_us`` past the
-    last arrival so admitted requests can drain."""
+    last arrival so admitted requests can drain. ``strict_chunks``
+    replays with the legacy 25 µs chunked loop (differential baseline)."""
     from repro.core.workloads import trace_tasks
     scfg = SchedConfig(n_cores=n_cores,
                        n_avx_cores=n_avx if specialization else 0,
@@ -146,7 +153,8 @@ def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
     topo = Topology.cores(n_cores, n_avx if specialization else 0)
     pol = policy or (SpecializedPolicy() if specialization
                      else SharedBaselinePolicy())
-    sim = Simulator(scfg, LicenseConfig(), topology=topo, policy=pol)
+    sim = Simulator(scfg, LicenseConfig(), topology=topo, policy=pol,
+                    strict_chunks=strict_chunks)
     tasks = trace_tasks(trace, isa=isa)
     for task, at in tasks:
         sim.add_task(task, at)
@@ -167,6 +175,8 @@ def run_trace_sim(trace, specialization: bool, *, n_cores: int = 12,
         "energy_proxy": lic["energy_proxy"],
         "migrations": c["migrations"],
         "type_changes": c["type_changes"],
+        "sim_us": until,
+        "events_processed": sim.events_processed,
     }
 
 

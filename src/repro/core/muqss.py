@@ -29,7 +29,7 @@ rr_interval; with equal priorities this is FIFO-ish within a quantum.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Set, Tuple
+from typing import Callable, Dict, Optional, Set, Tuple
 
 from repro.core.runqueue import CoreRunQueues
 from repro.core.task import Task, TaskType
@@ -92,6 +92,14 @@ class Scheduler:
         self.running: Dict[int, Optional[Task]] = {
             i: None for i in range(self.n_cores)}
         self.preempt_requests: Set[int] = set()
+        # Preemption delivery. With no listener the scheduler keeps the
+        # legacy polling contract: ``should_preempt(core)`` consumes a
+        # one-shot flag (re-checked by the chunked simulator every 25 µs).
+        # The event-horizon simulator registers ``preempt_listener`` and
+        # is NOTIFIED the moment an IPI is raised, so it can invalidate
+        # the target core's execution horizon instead of polling.
+        self.preempt_listener: Optional[Callable[[int, float], None]] = None
+        self._avx_sorted: Tuple[int, ...] = tuple(sorted(self.avx_cores))
         # The topology is static for a Scheduler's lifetime, so the
         # per-core policy answers are snapshotted off the hot path
         # (pick_next/_kick run every few simulated microseconds).
@@ -102,9 +110,28 @@ class Scheduler:
         self._penalty = [{TASKTYPE_OF[k]: v for k, v in
                           self.policy.penalty(self.topo, p).items()}
                          for p in pools]
+        # flattened (queue-index, penalty) scan plan per core, in the
+        # core's allowed-queue order — the pick_next inner loop reads
+        # this instead of hashing enum keys per queue per invocation
+        self._scan = [tuple((tt.value, self._penalty[c].get(tt, 0.0))
+                            for tt in self._allowed[c])
+                      for c in range(self.n_cores)]
         self._can_run = [{tt: self.policy.eligible(self.topo, p,
                                                    KIND_OF[tt])
                           for tt in TaskType} for p in pools]
+        # type-change decisions are pure in (pool, kind) — snapshot them
+        # like the other policy answers (~55k type changes per simulated
+        # second at the paper's operating point)
+        self._tc_dec = [{tt: self.policy.on_type_change(
+            self.topo, p, KIND_OF[tt]) for tt in TaskType} for p in pools]
+        # tc_local[core][ttype]: the change neither migrates nor depends
+        # on live queue state — pure bookkeeping. The event-horizon
+        # simulator executes such changes inline within a span (only
+        # when no dedicated heavy cores exist: the IPI-target scan reads
+        # running tasks' ttype and must never see a future value).
+        self.tc_local = [
+            {tt: not (d.migrate or d.yield_if_heavy_waiting)
+             for tt, d in per_core.items()} for per_core in self._tc_dec]
         self._placement = {
             tt: [u for n in self.policy.placement(self.topo, KIND_OF[tt])
                  for u in self.topo.pool(n).units] for tt in TaskType}
@@ -128,12 +155,6 @@ class Scheduler:
     def can_run(self, core: int, ttype: TaskType) -> bool:
         return self._can_run[core][ttype]
 
-    def allowed_queues(self, core: int) -> Tuple[TaskType, ...]:
-        return self._allowed[core]
-
-    def deadline_penalty(self, core: int) -> Dict[TaskType, float]:
-        return self._penalty[core]
-
     def set_deadline(self, task: Task, now: float):
         task.deadline = now + self.cfg.rr_interval_us
 
@@ -151,33 +172,42 @@ class Scheduler:
         preferring the task's last core (cache affinity). Which cores are
         allowed is the policy's placement decision."""
         cands = self._placement[task.ttype]
-        if task.last_core in cands and self.rqs[task.last_core].total() == 0:
+        if task.last_core in cands and \
+                self.rqs[task.last_core].n_queued == 0:
             return task.last_core
-        return min(cands, key=lambda c: self.rqs[c].total())
+        rqs = self.rqs
+        return min(cands, key=lambda c: rqs[c].n_queued)
 
     # --------------------------------------------------------- pick next
 
     def pick_next(self, core: int, now: float) -> Optional[Task]:
         """MuQSS selection: best deadline among own queues and every other
-        core's queues (lockless steal)."""
+        core's queues (lockless steal). Strict-< keeps the first rq /
+        first allowed queue on ties; the flattened precomputed scan
+        touches each queue once with no enum hashing."""
         self.invocations += 1
-        allowed = self.allowed_queues(core)
-        penalty = self.deadline_penalty(core)
-        best = None  # (deadline, rq_index, ttype)
+        scan = self._scan[core]
+        best_d = None
+        best = None  # (rq_index, ttype_value)
         for rq in self.rqs:
-            m = rq.min_deadline(allowed, penalty)
-            if m is None:
-                continue
-            d, q = m
             # eligibility: a task queued on an AVX core's scalar queue may
             # be stolen by scalar cores and vice versa — queues are global
             # in eligibility, local in placement.
-            if best is None or d < best[0]:
-                best = (d, rq.core_id, q)
+            if not rq.n_queued:
+                continue
+            by_val = rq.by_val
+            for qv, pen in scan:
+                t = by_val[qv].peek()
+                if t is None:
+                    continue
+                d = t.deadline + pen
+                if best_d is None or d < best_d:
+                    best_d = d
+                    best = (rq.core_id, qv)
         if best is None:
             return None
-        _, rq_id, q = best
-        task = self.rqs[rq_id].pop_type(q)
+        rq_id, qv = best
+        task = self.rqs[rq_id].pop_by_val(qv)
         if task is None:
             return None
         if rq_id != core:
@@ -207,15 +237,16 @@ class Scheduler:
         self.type_changes += 1
         task.ttype = new_type
         core = task.running_on
-        pool = self._pool_of_unit[core] if core is not None else None
-        dec = self.policy.on_type_change(self.topo, pool, KIND_OF[new_type])
+        dec = self._tc_dec[core][new_type] if core is not None \
+            else self.policy.on_type_change(self.topo, None,
+                                            KIND_OF[new_type])
         if dec.migrate:
             # current core must never run this kind: suspend + requeue,
             # and IPI a heavy core running stolen light work (if any —
             # an idle heavy core will naturally pick the task up).
             preempt = None
             if dec.preempt:
-                for c in sorted(self.avx_cores):
+                for c in self._avx_sorted:
                     r = self.running.get(c)
                     if r is not None and r.ttype == TaskType.SCALAR:
                         preempt = c
@@ -225,16 +256,26 @@ class Scheduler:
                         break
             if preempt is not None:
                 self.ipis += 1
-                self.preempt_requests.add(preempt)
+                self.request_preempt(preempt, now)
             return (True, preempt)
         if dec.yield_if_heavy_waiting:
             # asymmetric policy: keep running light work on the heavy
             # pool unless heavy work is queued for it
-            waiting = any(len(self.rqs[c].queues[TaskType.AVX]) > 0
-                          for c in self.avx_cores)
+            avx_val = TaskType.AVX.value
+            waiting = any(len(self.rqs[c].by_val[avx_val]) > 0
+                          for c in self._avx_sorted)
             if waiting:
                 return (True, None)
         return (False, None)
+
+    def request_preempt(self, core: int, now: float):
+        """Deliver a preemption IPI: push-notify the registered listener
+        (event-horizon mode) or set the polled one-shot flag (legacy
+        chunked mode, and direct scheduler use in tests)."""
+        if self.preempt_listener is not None:
+            self.preempt_listener(core, now)
+        else:
+            self.preempt_requests.add(core)
 
     def should_preempt(self, core: int) -> bool:
         if core in self.preempt_requests:

@@ -56,31 +56,41 @@ class DeadlineQueue:
 
 @dataclass
 class CoreRunQueues:
-    """The paper's 3-way replicated per-core run queue (§3.2)."""
+    """The paper's 3-way replicated per-core run queue (§3.2).
+
+    ``n_queued`` is maintained incrementally: emptiness is checked on
+    every scheduler invocation for every core (the lockless cross-core
+    steal scan), so it must be O(1)."""
     core_id: int
     queues: Dict[TaskType, DeadlineQueue] = field(
         default_factory=lambda: {q: DeadlineQueue() for q in QUEUES})
+    n_queued: int = 0
+    # queues indexed by TaskType.value — the steal scan touches every
+    # core's queues on every scheduler invocation and enum hashing is
+    # measurable there
+    by_val: List[DeadlineQueue] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.by_val = [None] * len(QUEUES)
+        for q in QUEUES:
+            self.by_val[q.value] = self.queues[q]
 
     def push(self, task: Task):
         self.queues[task.ttype].push(task)
+        self.n_queued += 1
 
     def remove(self, task: Task):
         self.queues[task.ttype].remove(task)
+        self.n_queued -= 1
 
-    def min_deadline(self, allowed: Tuple[TaskType, ...],
-                     penalty: Dict[TaskType, float]) -> Optional[Tuple[float, TaskType]]:
-        best = None
-        for q in allowed:
-            t = self.queues[q].peek()
-            if t is None:
-                continue
-            d = t.deadline + penalty.get(q, 0.0)
-            if best is None or d < best[0]:
-                best = (d, q)
-        return best
-
-    def pop_type(self, q: TaskType) -> Optional[Task]:
-        return self.queues[q].pop()
+    def pop_by_val(self, qv: int) -> Optional[Task]:
+        """Pop the earliest-deadline task of queue index ``qv``
+        (TaskType.value). The only pop path — owns the n_queued
+        decrement so the O(1) emptiness count cannot drift."""
+        task = self.by_val[qv].pop()
+        if task is not None:
+            self.n_queued -= 1
+        return task
 
     def total(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        return self.n_queued

@@ -8,16 +8,43 @@ machine, and collects everything Figs. 5/6/7 need: throughput, per-core
 frequency averages, migration counts, throttle cycles and flame-graph
 attribution (§3.3).
 
-Preemption granularity: long segments are executed in <=250 µs chunks and
-IPI preemption takes effect at chunk boundaries (µs-scale, matching the
-prototype's IPI latency class).
+Execution model — **event horizons** (default): for a task picked onto a
+core the simulator computes the next *real* boundary — a type-change /
+task-end item, quantum expiry, or a preemption IPI — and executes the
+whole span through the core's ``FrequencyDomain`` in one
+``execute_until`` call (closed form across license grant/revert
+transitions). Consecutive segments with identical execution class are
+merged into a single integration. A 10 ms AVX section is one heap event
+instead of 400.
+
+Preemption: IPIs are *pushed* to the simulator (the scheduler's
+``preempt_listener`` hook) instead of being polled every chunk. Spans
+are committed optimistically; when an IPI lands inside an in-flight
+span, the span is rolled back (domain snapshot + metric deltas) and
+re-executed with the legacy 25 µs chunking so the IPI takes effect at
+exactly the chunk boundary the chunked simulator would have used
+(µs-scale, matching the prototype's IPI latency class).
+
+``strict_chunks=True`` keeps the original execution loop — every
+segment stepped in <=25 µs ``chunk`` heap events with polled preemption
+— as a debug oracle. The differential suite
+(tests/test_event_horizon.py) replays every registered scenario through
+both modes and asserts identical scheduling decisions and metrics.
+Known strict-vs-horizon semantic difference: quantum expiry. Chunked
+stepping overshoots the quantum to the next 25 µs chunk boundary and
+requeues the task when that chunk *starts*; horizon mode ends the span
+exactly at quantum expiry (and when an IPI rollback replays into a
+quantum stop, at the replayed chunk's end — never at a heap position
+already processed). Quanta (6 ms) are much longer than the
+paper-workload segment runs, so the pinned figures are insensitive to
+this.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.license import LEVEL_OF, LicenseConfig
 from repro.core.muqss import SchedConfig, Scheduler
@@ -28,8 +55,10 @@ from repro.sched.topology import Topology
 
 CHUNK_US = 25.0   # preemption (IPI) granularity
 
+_INF = float("inf")
 
-@dataclass
+
+@dataclass(slots=True)
 class RequestDone:
     """Yielded by workload generators when one request completes."""
     kind: str = "request"
@@ -45,15 +74,22 @@ class Metrics:
     flame_cycles: Dict[Tuple[str, ...], float] = field(default_factory=dict)
     busy_us: float = 0.0
     total_us: float = 0.0
+    # cached sorted view of latencies_us — appends invalidate it (length
+    # check) so every reported percentile shares ONE sort
+    _lat_sorted: Optional[List[float]] = field(
+        default=None, init=False, repr=False, compare=False)
 
     def throughput_per_s(self) -> float:
         return self.completed / (self.total_us / 1e6) if self.total_us else 0.0
 
     def p(self, q: float) -> float:
-        if not self.latencies_us:
+        xs = self.latencies_us
+        if not xs:
             return 0.0
-        xs = sorted(self.latencies_us)
-        return xs[min(int(q * len(xs)), len(xs) - 1)]
+        cache = self._lat_sorted
+        if cache is None or len(cache) != len(xs):
+            cache = self._lat_sorted = sorted(xs)
+        return cache[min(int(q * len(cache)), len(cache) - 1)]
 
     def latencies_by_task(self) -> Dict[str, List[float]]:
         """Per-task-name request latencies. Trace replays name tasks
@@ -65,16 +101,49 @@ class Metrics:
         return out
 
 
+class _Span:
+    """One in-flight event-horizon execution span (plan + undo log).
+
+    The span is committed optimistically at plan time; everything here
+    exists so a preemption IPI landing inside [t0, end) can roll the
+    commit back and re-execute with legacy chunk granularity."""
+    __slots__ = ("task", "t0", "end", "reason", "epoch", "lic_snap",
+                 "task_snap", "met_snap", "busy_delta", "completed_delta",
+                 "tc_delta", "flame_deltas", "req_old", "consumed",
+                 "pushed_back", "shortened")
+
+    def __init__(self, task: Task, t0: float, epoch: int):
+        self.task = task
+        self.t0 = t0
+        self.end = t0
+        self.reason = "item"     # "item" | "quantum" | "preempt"
+        self.epoch = epoch
+        self.lic_snap = None
+        self.task_snap = (None, 0.0, task.ttype)
+        self.met_snap = (0, 0)
+        self.busy_delta = 0.0
+        self.completed_delta = 0
+        self.tc_delta = 0
+        self.flame_deltas: Dict[Tuple[str, ...], List[float]] = {}
+        self.req_old: Optional[Tuple[bool, float]] = None
+        self.consumed: List[object] = []
+        self.pushed_back = 0
+        self.shortened = False
+
+
 class Simulator:
     def __init__(self, sched_cfg: SchedConfig,
                  lic_cfg: LicenseConfig = LicenseConfig(),
                  ipc_locality_bonus: float = 0.0,
                  topology: Optional[Topology] = None,
-                 policy: Optional[Policy] = None):
+                 policy: Optional[Policy] = None,
+                 strict_chunks: bool = False):
         """ipc_locality_bonus: fractional IPC gain on cores with a reduced
         code footprint under specialization (paper §4.2 measured +0.7%).
         topology/policy: explicit repro.sched layout + decisions; default
-        derives both from sched_cfg (n_avx_cores / specialization)."""
+        derives both from sched_cfg (n_avx_cores / specialization).
+        strict_chunks: debug mode — execute every segment in 25 µs chunk
+        events with polled preemption (the pre-event-horizon loop)."""
         self.sched = Scheduler(sched_cfg, topology=topology, policy=policy)
         n_cores = self.sched.n_cores
         # one frequency domain per core — the same state machine the
@@ -83,12 +152,40 @@ class Simulator:
                     for _ in range(n_cores)]
         self.cfg = sched_cfg
         self.ipc_bonus = ipc_locality_bonus
+        self.strict_chunks = strict_chunks
         self.metrics = Metrics()
-        self._events: List[Tuple[float, int, int, object]] = []
+        self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
-        self._idle: set = set(range(n_cores))
+        self.events_processed = 0
+        self._idle: Set[int] = set(range(n_cores))
+        # min-tracking idle structure: one heap per task type holding
+        # only eligibility-compatible cores, validated lazily against
+        # self._idle (replaces the sorted(self._idle) scan per kick)
+        self._idle_heaps: Dict[TaskType, List[int]] = {
+            tt: [c for c in range(n_cores) if self.sched.can_run(c, tt)]
+            for tt in TaskType}
+        for h in self._idle_heaps.values():
+            heapq.heapify(h)
         self._quantum_end: Dict[int, float] = {}
         self._req_start: Dict[int, float] = {}
+        # event-horizon state
+        self._span: Dict[int, _Span] = {}
+        self._span_epoch = itertools.count()
+        self._pending_preempt: Set[int] = set()
+        if not strict_chunks:
+            self.sched.preempt_listener = self._notify_preempt
+        # hot-path constants (identical FP values to the per-chunk
+        # recomputation they replace)
+        f0 = self.lic[0].cfg.freqs_ghz[0] if n_cores else 0.0
+        self._chunk_cycles = CHUNK_US * f0 * 1000.0
+        self._bonus_div = 1.0 + self.ipc_bonus
+        # span-inlinable type changes: only without dedicated heavy
+        # cores — the IPI-target scan reads running tasks' ttype, and an
+        # optimistically committed span must never leak a future type to
+        # it. (Without heavy cores no IPIs exist, so spans are also
+        # never rolled back.)
+        self._inline_tc = None if self.sched.avx_cores \
+            else self.sched.tc_local
 
     # ------------------------------------------------------------ events
 
@@ -101,14 +198,20 @@ class Simulator:
     # ------------------------------------------------------------- main
 
     def run(self, until_us: float):
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            if t > until_us:
-                break
+        events = self._events
+        while events and events[0][0] <= until_us:
+            # peek-then-pop: an event beyond the horizon stays queued, so
+            # resuming with a later until_us does not silently lose it
+            t, _, kind, payload = heapq.heappop(events)
+            self.events_processed += 1
             if kind == "arrive":
                 self._on_arrive(t, payload)
             elif kind == "pick":
                 self._on_pick(t, payload)
+            elif kind == "span":
+                self._on_span(t, *payload)
+            elif kind == "exec":
+                self._on_exec(t, *payload)
             elif kind == "chunk":
                 self._on_chunk(t, *payload)
         self.metrics.total_us = until_us
@@ -121,24 +224,39 @@ class Simulator:
         self._kick(t, task.ttype)
 
     def _kick(self, t: float, ttype: TaskType):
-        """Wake an idle core the policy allows to run this task type."""
-        for core in sorted(self._idle):
-            if not self.sched.can_run(core, ttype):
+        """Wake the lowest-numbered idle core the policy allows to run
+        this task type (lazy min-heap per type; stale entries — cores
+        woken since they were pushed — are discarded on sight)."""
+        heap = self._idle_heaps[ttype]
+        idle = self._idle
+        while heap:
+            core = heap[0]
+            if core not in idle:
+                heapq.heappop(heap)
                 continue
-            self._idle.discard(core)
+            idle.discard(core)
             self._push(t, "pick", core)
             return
+
+    def _set_idle(self, core: int):
+        if core in self._idle:
+            return
+        self._idle.add(core)
+        for tt, heap in self._idle_heaps.items():
+            if self.sched.can_run(core, tt):
+                heapq.heappush(heap, core)
 
     def _on_pick(self, t: float, core: int):
         task = self.sched.pick_next(core, t)
         if task is None:
-            self._idle.add(core)
+            self._set_idle(core)
             return
         cost = self.cfg.sched_cost_us
         if task.last_core is not None and task.last_core != core:
             cost += self.cfg.migration_cost_us
         self._quantum_end[core] = t + cost + self.cfg.rr_interval_us
-        self._push(t + cost, "chunk", (core, task))
+        self._push(t + cost, "chunk" if self.strict_chunks else "exec",
+                   (core, task))
 
     def _requeue(self, t: float, core: int, task: Task,
                  fresh_deadline: bool):
@@ -146,6 +264,361 @@ class Simulator:
         self.sched.enqueue(task, t, fresh_deadline=fresh_deadline)
         self._kick(t, task.ttype)
         self._push(t, "pick", core)
+
+    def _record_done(self, t: float, task: Task):
+        m = self.metrics
+        m.completed += 1
+        t0 = self._req_start.get(task.tid, t)
+        m.latencies_us.append(t - t0)
+        m._lat_sorted = None
+        m.completions.append((t, t - t0, task.name))
+        self._req_start[task.tid] = t
+
+    # ------------------------------------------- event-horizon execution
+
+    def _on_exec(self, t: float, core: int, task: Task):
+        """One scheduling step: process a single non-segment item (the
+        legacy per-item event granularity, so requeue/completion
+        visibility is identical) or open an execution span at the first
+        Segment."""
+        item = task.next_segment()
+        if item is None:
+            task.done = True
+            task.finished_t = t
+            self.sched.on_done(task, core)
+            self._push(t, "pick", core)
+            return
+        if isinstance(item, TypeChange):
+            task.current_seg = None
+            requeue, _preempt = self.sched.on_type_change(
+                task, item.new_type, t)
+            if requeue:
+                self._requeue(t + self.cfg.ipi_cost_us, core, task,
+                              fresh_deadline=False)
+            else:
+                self._push(t, "exec", (core, task))
+            return
+        if isinstance(item, RequestDone):
+            task.current_seg = None
+            self._record_done(t, task)
+            self._push(t, "exec", (core, task))
+            return
+        self._start_span(t, core, task)
+
+    def _exec_chunk(self, core: int, task: Task, seg: Segment, t: float
+                    ) -> float:
+        """Execute exactly one legacy 25 µs chunk of ``seg`` (identical
+        arithmetic to the strict-mode loop); returns the end time."""
+        lic = self.lic[core]
+        m = self.metrics
+        remaining = seg.cycles - task.seg_done_cycles
+        run = min(remaining, self._chunk_cycles)
+        if self.ipc_bonus and self.sched.specialized \
+                and seg.iclass == IClass.SCALAR:
+            run_eff = run / self._bonus_div
+        else:
+            run_eff = run
+        thr0 = lic.throttle_cycles
+        t_end = lic.execute(t, run_eff, LEVEL_OF[seg.iclass], seg.dense)
+        m.busy_us += t_end - t
+        if seg.stack:
+            dthr = lic.throttle_cycles - thr0
+            fm = m.flame_throttle
+            fm[seg.stack] = fm.get(seg.stack, 0.0) + dthr
+            fc = m.flame_cycles
+            fc[seg.stack] = fc.get(seg.stack, 0.0) + run
+        task.seg_done_cycles += run
+        if task.seg_done_cycles >= seg.cycles - 1e-6:
+            task.current_seg = None
+        return t_end
+
+    def _start_span(self, t: float, core: int, task: Task):
+        """Plan AND optimistically commit a span: pull items until the
+        next real boundary (type change / task end / quantum expiry),
+        merging consecutive same-class segments into single closed-form
+        ``execute_until`` calls. The undo log makes the commit revocable
+        until the span event fires (preemption shortening)."""
+        if core in self._pending_preempt:
+            # a preemption IPI arrived while this core was between
+            # spans: the freshly scheduled task runs exactly one chunk,
+            # then the still-pending IPI takes effect (legacy polling
+            # consumed the flag at the first chunk boundary)
+            self._pending_preempt.discard(core)
+            seg = task.next_segment()
+            t_end = self._exec_chunk(core, task, seg, t)
+            self._requeue(t_end + self.cfg.ipi_cost_us, core, task,
+                          fresh_deadline=False)
+            return
+        lic = self.lic[core]
+        m = self.metrics
+        qend = self._quantum_end.get(core, _INF)
+        span = _Span(task, t, next(self._span_epoch))
+        span.lic_snap = lic.save_state()
+        span.task_snap = (task.current_seg, task.seg_done_cycles,
+                          task.ttype)
+        span.met_snap = (len(m.latencies_us), len(m.completions))
+        inline_tc = self._inline_tc[core] if self._inline_tc is not None \
+            else None
+        sched = self.sched
+        consumed = span.consumed
+        flame_deltas = span.flame_deltas
+        bonus_on = bool(self.ipc_bonus and self.sched.specialized)
+        bonus_div = self._bonus_div
+        fm = m.flame_throttle
+        fc = m.flame_cycles
+        gen = task.segments
+        buf = task.pending
+        execute_until = lic.execute_until
+        # the first item honors the cached current segment (resume after
+        # quantum expiry); all later pulls are raw and go to the rollback
+        # log. `item`/`start_done` describe the next unprocessed item.
+        item = task.current_seg
+        if item is not None:
+            start_done = task.seg_done_cycles
+            task.current_seg = None
+        else:
+            item = buf.pop(0) if buf else next(gen, None)
+            if item is not None:
+                consumed.append(item)
+            start_done = 0.0
+        now = t
+        while True:
+            cls = type(item)
+            if cls is not Segment:
+                if cls is RequestDone:
+                    t0r = self._req_start.get(task.tid, now)
+                    if span.req_old is None:
+                        span.req_old = (task.tid in self._req_start, t0r)
+                    m.completed += 1
+                    m.latencies_us.append(now - t0r)
+                    m._lat_sorted = None
+                    m.completions.append((now, now - t0r, task.name))
+                    self._req_start[task.tid] = now
+                    span.completed_delta += 1
+                    item = buf.pop(0) if buf else next(gen, None)
+                    if item is not None:
+                        consumed.append(item)
+                    start_done = 0.0
+                    continue
+                if cls is TypeChange and inline_tc is not None \
+                        and inline_tc[item.new_type]:
+                    # pure-bookkeeping type change (never migrates, no
+                    # queue-state dependency): commit it inline and keep
+                    # the span running — exactly what the legacy loop
+                    # did across two zero-width events
+                    task.type_changes += 1
+                    sched.type_changes += 1
+                    task.ttype = item.new_type
+                    span.tc_delta += 1
+                    item = buf.pop(0) if buf else next(gen, None)
+                    if item is not None:
+                        consumed.append(item)
+                    start_done = 0.0
+                    continue
+                # migrating/queue-dependent TypeChange or end-of-task:
+                # span boundary. Cache the item so the finalize event
+                # processes it like any scheduling step.
+                task.current_seg = item
+                task.seg_done_cycles = 0.0
+                span.reason = "item"
+                break
+            # Segment: gather a maximal run of consecutive segments with
+            # the same execution class, then integrate it in one call
+            seg: Segment = item
+            iclass = seg.iclass
+            key_dense = seg.dense
+            stack = seg.stack
+            segs = [(seg, start_done)]
+            run_nominal = seg.cycles - start_done
+            while True:
+                nxt = buf.pop(0) if buf else next(gen, None)
+                if nxt is not None:
+                    consumed.append(nxt)
+                if type(nxt) is Segment and nxt.iclass is iclass \
+                        and nxt.dense == key_dense and nxt.stack == stack:
+                    segs.append((nxt, 0.0))
+                    run_nominal += nxt.cycles
+                else:
+                    break
+            if bonus_on and iclass == IClass.SCALAR:
+                run_eff = run_nominal / bonus_div
+                nominal_scale = bonus_div
+            else:
+                run_eff = run_nominal
+                nominal_scale = 1.0
+            thr0 = lic.throttle_cycles
+            end, done_eff = execute_until(
+                now, run_eff, LEVEL_OF[iclass], key_dense, deadline=qend)
+            m.busy_us += end - now
+            span.busy_delta += end - now
+            partial = done_eff < run_eff - 1e-6
+            nominal_done = run_nominal if not partial \
+                else done_eff * nominal_scale
+            if stack:
+                dthr = lic.throttle_cycles - thr0
+                fm[stack] = fm.get(stack, 0.0) + dthr
+                fc[stack] = fc.get(stack, 0.0) + nominal_done
+                d = flame_deltas.get(stack)
+                if d is None:
+                    flame_deltas[stack] = [dthr, nominal_done]
+                else:
+                    d[0] += dthr
+                    d[1] += nominal_done
+            now = end
+            if partial:
+                # quantum expired inside the run: attribute the executed
+                # cycles to the merged segments in order; the partial
+                # segment becomes the task's current segment again, and
+                # everything pulled-but-unexecuted (unstarted tail
+                # segments, plus the non-matching item that ended the
+                # gather) goes back onto the pushback buffer
+                acc = nominal_done
+                part = None
+                tail: List[object] = []
+                for s, sd in segs:
+                    avail = s.cycles - sd
+                    if part is None:
+                        if acc >= avail - 1e-6:
+                            acc -= avail
+                        else:
+                            part = (s, sd + acc)
+                    else:
+                        tail.append(s)
+                if nxt is not None:
+                    tail.append(nxt)
+                if tail:
+                    buf[:0] = tail
+                    span.pushed_back = len(tail)
+                if part is not None:
+                    task.current_seg, task.seg_done_cycles = part
+                span.reason = "quantum"
+                break
+            if now >= qend:
+                # full run done exactly at/after expiry: the gather's
+                # non-matching item is the task's next item
+                task.current_seg = nxt
+                task.seg_done_cycles = 0.0
+                span.reason = "quantum"
+                break
+            item = nxt
+            start_done = 0.0
+        span.end = now
+        self._span[core] = span
+        self._push(now, "span", (core, span.epoch))
+
+    def _on_span(self, t: float, core: int, epoch: int):
+        """Finalize a committed span: the boundary action happens here,
+        at the span's event time, so requeue visibility to other cores
+        matches the legacy event order."""
+        span = self._span.get(core)
+        if span is None or span.epoch != epoch:
+            return    # superseded by a preemption shortening
+        del self._span[core]
+        task = span.task
+        if span.reason == "quantum":
+            self._requeue(span.end, core, task, fresh_deadline=True)
+            return
+        if span.reason == "preempt":
+            self._requeue(span.end + self.cfg.ipi_cost_us, core, task,
+                          fresh_deadline=False)
+            return
+        self._on_exec(t, core, task)    # boundary item is cached
+
+    # ------------------------------------------------------- preemption
+
+    def _notify_preempt(self, core: int, t: float):
+        """Scheduler push-notification: an IPI was raised for ``core`` at
+        time ``t``. If a span is in flight, roll its optimistic commit
+        back and re-execute with legacy chunk granularity so the IPI
+        takes effect at the exact 25 µs boundary polling would have
+        used; otherwise leave the IPI pending for the core's next span."""
+        span = self._span.get(core)
+        if span is None:
+            self._pending_preempt.add(core)
+            return
+        if span.shortened or core in self._pending_preempt:
+            return    # legacy flag was a set: repeat IPIs coalesce
+        span.shortened = True
+        task = span.task
+        m = self.metrics
+        # ---- roll back the optimistic commit
+        self.lic[core].restore_state(span.lic_snap)
+        m.busy_us -= span.busy_delta
+        if span.completed_delta:
+            n_lat, n_comp = span.met_snap
+            del m.latencies_us[n_lat:n_lat + span.completed_delta]
+            del m.completions[n_comp:n_comp + span.completed_delta]
+            m.completed -= span.completed_delta
+            m._lat_sorted = None
+            has_old, old = span.req_old
+            if has_old:
+                self._req_start[task.tid] = old
+            else:
+                self._req_start.pop(task.tid, None)
+        for stack, (dthr, dcyc) in span.flame_deltas.items():
+            m.flame_throttle[stack] -= dthr
+            m.flame_cycles[stack] -= dcyc
+        cs0, sd0, tt0 = span.task_snap
+        task.current_seg = cs0
+        task.seg_done_cycles = sd0
+        if span.tc_delta:
+            task.ttype = tt0
+            task.type_changes -= span.tc_delta
+            self.sched.type_changes -= span.tc_delta
+        if span.pushed_back:
+            # a quantum-partial commit already returned pulled items to
+            # the buffer; drop them before replaying from the consumed
+            # log or they would be duplicated
+            del task.pending[:span.pushed_back]
+        task.pending = span.consumed + task.pending
+        # ---- re-execute chunk-by-chunk until the IPI boundary
+        ev_t, end, reason = self._reexec_chunks(core, task, span.t0, t)
+        span.epoch = next(self._span_epoch)
+        span.end = end
+        span.reason = reason
+        self._push(ev_t, "span", (core, span.epoch))
+
+    def _reexec_chunks(self, core: int, task: Task, t0: float,
+                       t_flag: float) -> Tuple[float, float, str]:
+        """Legacy-granularity replay of a rolled-back span from ``t0``.
+        The IPI (raised at ``t_flag``) is consumed at the end of the
+        first chunk that *starts* after it — exactly when the polled
+        flag became visible to the chunked loop. Returns
+        ``(event_time, end_time, reason)``: the time the finalize event
+        must fire (the legacy pop time, where requeues became visible)
+        and the time execution actually stopped."""
+        qend = self._quantum_end.get(core, _INF)
+        now = t0
+        while True:
+            item = task.next_segment()
+            if item is None or isinstance(item, TypeChange):
+                # boundary reached without consuming the IPI: it stays
+                # pending for this core (legacy flag semantics)
+                self._pending_preempt.add(core)
+                return (now, now, "item")
+            if isinstance(item, RequestDone):
+                task.current_seg = None
+                self._record_done(now, task)
+                continue
+            seg: Segment = item
+            while True:
+                start = now
+                now = self._exec_chunk(core, task, seg, now)
+                if start > t_flag:
+                    return (start, now, "preempt")
+                if now >= qend:
+                    # quantum expired before the IPI boundary: the IPI
+                    # stays pending. Finalize at the chunk END (never in
+                    # the past — the replay runs at wall position
+                    # t_flag >= start): requeue visibility lands at the
+                    # quantum stop, consistent with horizon mode's
+                    # documented exact-expiry quantum semantics.
+                    self._pending_preempt.add(core)
+                    return (now, now, "quantum")
+                if task.current_seg is None:
+                    break    # segment finished; pull the next item
+
+    # --------------------------------------- strict chunked mode (debug)
 
     def _on_chunk(self, t: float, core: int, task: Task):
         item = task.next_segment()
@@ -167,41 +640,17 @@ class Simulator:
             return
         if isinstance(item, RequestDone):
             task.current_seg = None
-            self.metrics.completed += 1
-            t0 = self._req_start.get(task.tid, t)
-            self.metrics.latencies_us.append(t - t0)
-            self.metrics.completions.append((t, t - t0, task.name))
-            self._req_start[task.tid] = t
+            self._record_done(t, task)
             self._push(t, "chunk", (core, task))
             return
         seg: Segment = item
-        lic = self.lic[core]
-        nominal_chunk = CHUNK_US * lic.cfg.freqs_ghz[0] * 1000.0
-        remaining = seg.cycles - task.seg_done_cycles
-        run = min(remaining, nominal_chunk)
-        if self.ipc_bonus and self.sched.specialized \
-                and seg.iclass == IClass.SCALAR:
-            run_eff = run / (1.0 + self.ipc_bonus)
-        else:
-            run_eff = run
-        thr0 = lic.throttle_cycles
-        t_end = lic.execute(t, run_eff, LEVEL_OF[seg.iclass], seg.dense)
-        self.metrics.busy_us += t_end - t
-        if seg.stack:
-            dthr = lic.throttle_cycles - thr0
-            fm = self.metrics.flame_throttle
-            fm[seg.stack] = fm.get(seg.stack, 0.0) + dthr
-            fc = self.metrics.flame_cycles
-            fc[seg.stack] = fc.get(seg.stack, 0.0) + run
-        task.seg_done_cycles += run
-        if task.seg_done_cycles >= seg.cycles - 1e-6:
-            task.current_seg = None
+        t_end = self._exec_chunk(core, task, seg, t)
         # preemption / quantum checks at chunk boundary
         if self.sched.should_preempt(core):
             self._requeue(t_end + self.cfg.ipi_cost_us, core, task,
                           fresh_deadline=False)
             return
-        if t_end >= self._quantum_end.get(core, float("inf")):
+        if t_end >= self._quantum_end.get(core, _INF):
             self._requeue(t_end, core, task, fresh_deadline=True)
             return
         self._push(t_end, "chunk", (core, task))

@@ -27,7 +27,7 @@ class IClass(enum.Enum):
     AVX512 = 2      # heavy AVX-512 -> L2
 
 
-@dataclass
+@dataclass(slots=True)
 class Segment:
     """A stretch of straight-line code: cycles at nominal frequency.
 
@@ -35,6 +35,9 @@ class Segment:
     license request (paper §2: ~1 heavy op/cycle sustained; §3.3: short or
     stall-ridden sections do not change frequency).
     ``stack`` — call-stack label for flame-graph attribution (§3.3).
+
+    ``__slots__``: segments are the innermost simulator object (one per
+    scheduled span, millions per run) — attribute storage matters.
     """
     cycles: float
     iclass: IClass = IClass.SCALAR
@@ -45,10 +48,15 @@ class Segment:
 _task_ids = itertools.count()
 
 
-@dataclass
+@dataclass(slots=True)
 class Task:
     """A schedulable entity (thread in the paper; request in the serving
-    adaptation). ``segments`` yields Segments; None terminates."""
+    adaptation). ``segments`` yields Segments; None terminates.
+
+    ``pending`` is a pushback buffer consumed before the generator: the
+    event-horizon simulator pulls items ahead of execution to plan a
+    span, and returns the unexecuted tail here when a preemption IPI
+    shortens the span (generators cannot rewind)."""
     segments: Iterator[Optional[Segment]]
     ttype: TaskType = TaskType.UNTYPED
     name: str = ""
@@ -59,6 +67,7 @@ class Task:
     running_on: Optional[int] = None
     current_seg: Optional[Segment] = None
     seg_done_cycles: float = 0.0
+    pending: list = field(default_factory=list)
     done: bool = False
     # stats
     created_t: float = 0.0
@@ -69,10 +78,13 @@ class Task:
     def next_segment(self) -> Optional[Segment]:
         if self.current_seg is not None:
             return self.current_seg
-        try:
-            seg = next(self.segments)
-        except StopIteration:
-            seg = None
+        if self.pending:
+            seg = self.pending.pop(0)
+        else:
+            try:
+                seg = next(self.segments)
+            except StopIteration:
+                seg = None
         self.current_seg = seg
         self.seg_done_cycles = 0.0
         return seg
@@ -87,7 +99,7 @@ class AnnotationAPI:
     """
 
 
-@dataclass
+@dataclass(slots=True)
 class TypeChange:
     """Marker yielded by a task generator instead of a Segment."""
     new_type: TaskType

@@ -47,7 +47,7 @@ from repro.sched.policy import LoadSignals, Policy
 from repro.sched.topology import Topology, WorkKind
 
 
-@dataclass
+@dataclass(slots=True)
 class Request:
     rid: int
     arrive_ms: float
@@ -131,6 +131,12 @@ class ServeMetrics:
     # (t_ms, {pool: n_units}) for every applied policy resize
     resize_events: List[Tuple[float, Dict[str, int]]] = \
         field(default_factory=list)
+    # cached sorted views of ttft_ms / itl_ms, maintained by p(); an
+    # append since the last sort (length mismatch) invalidates them
+    _ttft_sorted: Optional[List[float]] = field(
+        default=None, init=False, repr=False, compare=False)
+    _itl_sorted: Optional[List[float]] = field(
+        default=None, init=False, repr=False, compare=False)
 
     def charge(self, pool: str, kind: str, ms: float):
         slot = self.pool_busy.setdefault(pool, {"heavy": 0.0, "light": 0.0})
@@ -141,9 +147,23 @@ class ServeMetrics:
             self.decode_busy_ms += ms
 
     def p(self, xs, q):
+        """Percentile over ``xs``. When ``xs`` is one of this object's
+        latency lists (ttft_ms / itl_ms) the sorted view is cached and
+        invalidated by appends (length check), so a summary() computing
+        four percentiles sorts each list once — not once per
+        percentile. Arbitrary other lists are sorted on the spot."""
         if not xs:
             return 0.0
-        s = sorted(xs)
+        if xs is self.ttft_ms:
+            s = self._ttft_sorted
+            if s is None or len(s) != len(xs):
+                s = self._ttft_sorted = sorted(xs)
+        elif xs is self.itl_ms:
+            s = self._itl_sorted
+            if s is None or len(s) != len(xs):
+                s = self._itl_sorted = sorted(xs)
+        else:
+            s = sorted(xs)
         return s[min(int(q * len(s)), len(s) - 1)]
 
     def summary(self) -> Dict[str, float]:

@@ -176,6 +176,23 @@ class FrequencyDomain:
         at ``t``; returns the end time and updates license state and all
         counters. ``dense`` heavy work requests/refreshes the license;
         sparse sections run through without changing frequency."""
+        return self.execute_until(t, cycles, level, dense)[0]
+
+    def execute_until(self, t: float, cycles: float, level: int,
+                      dense: bool, deadline: Optional[float] = None
+                      ) -> Tuple[float, float]:
+        """Batched fast path: integrate up to ``cycles`` of level-
+        ``level`` work starting at ``t``, stopping early when the wall
+        clock reaches ``deadline``. Splits only at license transitions
+        (grant/revert boundaries), in closed form — one loop iteration
+        per frequency phase instead of one per caller-side chunk.
+
+        Returns ``(end_time, cycles_done)``. With ``deadline=None`` the
+        arithmetic is operation-for-operation the original ``execute``
+        (the paper pins rely on that). A deadline-capped dense section
+        still requests the license and schedules the revert hysteresis
+        from its *partial* end — exactly what back-to-back chunked
+        ``execute`` calls produced."""
         cfg = self.cfg
         self._advance(t)
         want = level
@@ -195,11 +212,15 @@ class FrequencyDomain:
         remaining = cycles
         now = t
         while remaining > 1e-9:
+            if deadline is not None and now >= deadline:
+                break
             v_ghz = self.speed_ghz(now)
             v = v_ghz * cfg.cycles_per_ghz                 # cycles / unit
             nxt = self.next_event(now)
             span = remaining / v if nxt is None else min(remaining / v,
                                                          nxt - now)
+            if deadline is not None and deadline - now < span:
+                span = deadline - now
             done = span * v
             idx = self.level if self.pending is None else self.pending
             self.cycles_at_level[idx] += done
@@ -219,7 +240,32 @@ class FrequencyDomain:
         if dense and want >= 1:
             self.last_heavy_end = now
             self.revert_at = now + cfg.hysteresis
-        return now
+        return now, cycles - remaining
+
+    # ------------------------------------------------ state save/restore
+
+    def save_state(self) -> Tuple:
+        """Cheap full snapshot of license + accounting state. Used by the
+        event-horizon simulator to undo an optimistically committed span
+        when a preemption IPI lands inside it (history lists are
+        truncated back by length, not copied). Taken once per span —
+        keep it a flat tuple, no introspection."""
+        return (self.level, self.pending, self.grant_at, self.revert_at,
+                self.last_heavy_end, self.throttle_cycles,
+                self.throttled_time, self.busy_time, self.freq_time,
+                self.energy, self.transitions,
+                list(self.cycles_at_level), list(self.time_at_level),
+                len(self.events), len(self.sections))
+
+    def restore_state(self, snap: Tuple) -> None:
+        (self.level, self.pending, self.grant_at, self.revert_at,
+         self.last_heavy_end, self.throttle_cycles, self.throttled_time,
+         self.busy_time, self.freq_time, self.energy, self.transitions,
+         cyc, tim, n_ev, n_sec) = snap
+        self.cycles_at_level[:] = cyc
+        self.time_at_level[:] = tim
+        del self.events[n_ev:]
+        del self.sections[n_sec:]
 
     # ------------------------------------------- duration-facing API
 

@@ -50,7 +50,7 @@ from __future__ import annotations
 import argparse
 import json
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.sched.engine import Engine, PoolModel, Request, ServeConfig
 from repro.sched.policy import make_policy, registered_policies
@@ -296,16 +296,41 @@ def replay_engine(trace: Trace, policy_name: str, *, n_devices: int = 16,
 
 # --------------------------------------------------------------- matrix
 
+# Module-level worker functions: a process pool can only dispatch
+# importable callables. Each leg receives the frozen trace (pickled
+# once per leg) plus its coordinates and returns (scenario, slot, key,
+# result) so the parent can assemble the matrix deterministically
+# regardless of completion order.
+
+
+def _run_leg(leg) -> Tuple[str, str, str, Dict]:
+    if leg[0] == "engine":
+        _, name, pol, trace, n_devices, prefill_devices = leg
+        return (name, "engine", pol,
+                replay_engine(trace, pol, n_devices=n_devices,
+                              prefill_devices=prefill_devices))
+    from repro.core.experiments import run_trace_sim
+    _, name, spec, trace = leg
+    return (name, "simulator", "specialized" if spec else "shared",
+            run_trace_sim(trace, spec))
+
 
 def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
                     duration_ms: float = 30_000.0, seed: int = 0,
                     n_devices: int = 16, prefill_devices: int = 4,
                     policies: Optional[Sequence[str]] = None,
-                    simulator: bool = True) -> Dict:
+                    simulator: bool = True, parallel: int = 0) -> Dict:
     """The differential matrix: every scenario x every registered
     policy through the engine (+ shared/specialized through the OS
-    simulator), one identical trace per scenario."""
-    from repro.core.experiments import run_trace_sim
+    simulator), one identical trace per scenario.
+
+    ``parallel=N`` fans the independent scenario x policy x mechanism
+    legs across a process pool of N workers, each replaying the shared
+    frozen trace (generated once in the parent, shipped by pickle —
+    workers never regenerate it, so every leg sees byte-identical
+    requests). Legs are pure functions of their inputs and results are
+    reassembled in registry order, so the matrix is identical to the
+    serial one. ``parallel<=1`` keeps the serial path."""
     names = list(scenarios) if scenarios is not None else sorted(SCENARIOS)
     pols = list(policies) if policies is not None \
         else list(registered_policies())
@@ -315,28 +340,38 @@ def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
                     "prefill_devices": prefill_devices,
                     "policies": pols, "scenarios": names},
     }
+    traces = {name: scenario_trace(name, duration_ms=duration_ms,
+                                   seed=seed) for name in names}
     for name in names:
-        trace = scenario_trace(name, duration_ms=duration_ms, seed=seed)
-        cell: Dict = {
+        out[name] = {
             "trace": {"scenario": name, "seed": seed,
                       "duration_ms": duration_ms,
-                      "n_requests": len(trace.requests)},
+                      "n_requests": len(traces[name].requests)},
             "engine": {},
         }
-        for pol in pols:
-            cell["engine"][pol] = replay_engine(
-                trace, pol, n_devices=n_devices,
-                prefill_devices=prefill_devices)
         if simulator:
-            cell["simulator"] = {
-                "shared": run_trace_sim(trace, False),
-                "specialized": run_trace_sim(trace, True),
-            }
+            out[name]["simulator"] = {}
+    legs = [("engine", name, pol, traces[name], n_devices,
+             prefill_devices) for name in names for pol in pols]
+    if simulator:
+        legs += [("sim", name, spec, traces[name])
+                 for name in names for spec in (False, True)]
+    if parallel and parallel > 1:
+        from concurrent.futures import ProcessPoolExecutor
+        # one combined map: simulator legs fill workers as engine legs
+        # drain instead of waiting on a batch barrier
+        with ProcessPoolExecutor(max_workers=parallel) as pool:
+            results = list(pool.map(_run_leg, legs))
+    else:
+        results = [_run_leg(leg) for leg in legs]
+    for name, slot, key, res in results:
+        out[name][slot][key] = res
+    for name in names:
+        cell = out[name]
         if "shared" in cell["engine"] and "specialized" in cell["engine"]:
             cell["derived"] = headline_metrics(
                 cell["engine"]["shared"]["metrics"],
                 cell["engine"]["specialized"]["metrics"])
-        out[name] = cell
     return out
 
 
@@ -384,6 +419,11 @@ def main(argv=None) -> int:
     ap.add_argument("--scenarios", nargs="*", default=None)
     ap.add_argument("--no-simulator", action="store_true",
                     help="skip the OS-simulator leg of the differential")
+    ap.add_argument("--parallel", type=int, default=0, metavar="N",
+                    help="fan scenario x policy x mechanism legs across "
+                         "a process pool of N workers over the shared "
+                         "frozen traces (0/1 = serial; results are "
+                         "identical either way)")
     ap.add_argument("--out", type=Path, default=None,
                     help="write the full metrics matrix as JSON")
     ap.add_argument("--freq-trace", type=Path, default=None,
@@ -397,7 +437,7 @@ def main(argv=None) -> int:
         args.scenarios, duration_ms=duration, seed=args.seed,
         n_devices=8 if args.smoke else 16,
         prefill_devices=2 if args.smoke else 4,
-        simulator=not args.no_simulator)
+        simulator=not args.no_simulator, parallel=args.parallel)
     for row in matrix_rows(matrix):
         print(row)
     if args.out:

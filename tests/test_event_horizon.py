@@ -1,0 +1,296 @@
+"""Bit-fidelity of event-horizon execution vs. legacy chunked stepping.
+
+The simulator's default execution mode computes analytic event horizons
+(one span per real boundary) while ``strict_chunks=True`` keeps the
+original 25 µs chunk loop. Both must make IDENTICAL scheduling
+decisions: every registered scenario is replayed through both modes
+under both layouts and every integer counter (migrations, type changes,
+steals, IPIs, license transitions), the completion list (task names and
+µs-exact times), and the license accounting must agree. Cycle/energy
+accounting is floating-point and the two modes group additions
+differently (per-chunk vs. per-phase), so float comparisons use a tight
+relative tolerance rather than bit equality.
+
+Also here: property tests for ``FrequencyDomain.execute_until`` against
+repeated ``execute`` calls on random level sequences, and the
+``Simulator.run`` resume bugfix (an event beyond the horizon must not
+be dropped).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.license import LicenseConfig
+from repro.core.muqss import SchedConfig
+from repro.core.simulator import RequestDone, Simulator
+from repro.core.task import IClass, Segment, Task, TaskType
+from repro.core.workloads import trace_tasks
+from repro.sched.freq import FreqDomainConfig, FrequencyDomain
+from repro.sched.policy import SharedBaselinePolicy, SpecializedPolicy
+from repro.sched.topology import Topology
+from repro.sched.workload import SCENARIOS, scenario_trace
+
+INT_COUNTERS = ("transitions", "migrations", "type_changes", "steals",
+                "ipis")
+FLOAT_COUNTERS = ("LVL0_TURBO_LICENSE", "LVL1_TURBO_LICENSE",
+                  "LVL2_TURBO_LICENSE", "THROTTLE")
+
+
+def _replay(trace, spec: bool, strict: bool) -> Simulator:
+    scfg = SchedConfig(n_cores=12, n_avx_cores=4 if spec else 0,
+                       specialization=spec)
+    topo = Topology.cores(12, 4 if spec else 0)
+    pol = SpecializedPolicy() if spec else SharedBaselinePolicy()
+    sim = Simulator(scfg, LicenseConfig(), topology=topo, policy=pol,
+                    strict_chunks=strict)
+    tasks = trace_tasks(trace)
+    for task, at in tasks:
+        sim.add_task(task, at)
+    sim.run(max(at for _, at in tasks) + 20_000.0)
+    return sim
+
+
+def _assert_equivalent(a: Simulator, b: Simulator, ctx: str):
+    ca, cb = a.counters(), b.counters()
+    for k in INT_COUNTERS:
+        assert ca[k] == cb[k], f"{ctx}: counter {k}: {ca[k]} != {cb[k]}"
+    for k in FLOAT_COUNTERS:
+        assert ca[k] == pytest.approx(cb[k], rel=1e-9, abs=1e-6), \
+            f"{ctx}: counter {k}"
+    ma, mb = a.metrics, b.metrics
+    assert ma.completed == mb.completed, ctx
+    # completions: same requests at the same (µs-rounded) times; list
+    # order may differ because horizon mode records a span's completions
+    # when the span commits, not one event per RequestDone
+    la = sorted((round(t, 6), name) for t, _, name in ma.completions)
+    lb = sorted((round(t, 6), name) for t, _, name in mb.completions)
+    assert la == lb, f"{ctx}: completion lists differ"
+    assert ma.busy_us == pytest.approx(mb.busy_us, rel=1e-9), ctx
+    sa, sb = a.license_snapshot(), b.license_snapshot()
+    for k, v in sa.items():
+        assert v == pytest.approx(sb[k], rel=1e-9, abs=1e-6), \
+            f"{ctx}: license {k}"
+    assert a.avg_frequency_ghz() == pytest.approx(
+        b.avg_frequency_ghz(), rel=1e-9), ctx
+    # flame attribution: same stacks, same totals
+    for stacks_a, stacks_b in ((ma.flame_cycles, mb.flame_cycles),
+                               (ma.flame_throttle, mb.flame_throttle)):
+        for k in set(stacks_a) | set(stacks_b):
+            assert stacks_a.get(k, 0.0) == pytest.approx(
+                stacks_b.get(k, 0.0), rel=1e-9, abs=1e-3), \
+                f"{ctx}: flame {k}"
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("spec", [False, True],
+                         ids=["shared", "specialized"])
+def test_differential_scenarios(scenario, spec):
+    """Every registered scenario, both layouts: chunked and horizon
+    execution produce identical schedules and metrics."""
+    trace = scenario_trace(scenario, duration_ms=6_000.0, seed=0)
+    a = _replay(trace, spec, strict=True)
+    b = _replay(trace, spec, strict=False)
+    _assert_equivalent(a, b, f"{scenario}/{'spec' if spec else 'shared'}")
+    # the point of the exercise: horizon mode processes far fewer events
+    assert b.events_processed < a.events_processed
+
+
+def test_differential_covers_preemption():
+    """The differential is only meaningful if IPI preemption (the
+    hardest path: span rollback + chunked re-execution) actually fires
+    in the replayed scenarios."""
+    trace = scenario_trace("steady", duration_ms=6_000.0, seed=0)
+    sim = _replay(trace, True, strict=False)
+    assert sim.counters()["ipis"] > 0
+
+
+@pytest.mark.slow
+def test_differential_webserver():
+    """The paper's webserver workload (annotated crypto + specialization
+    + IPC bonus) through both modes. Quantum expiry semantics differ
+    deliberately (chunk overshoot vs. exact expiry), so only scalar
+    aggregates are compared, within the pinned figures' bands."""
+    from repro.core.experiments import run_webserver
+    for spec in (False, True):
+        a = run_webserver("avx512", spec, sim_us=300_000,
+                          strict_chunks=True)
+        b = run_webserver("avx512", spec, sim_us=300_000,
+                          strict_chunks=False)
+        assert b["throughput_rps"] == pytest.approx(
+            a["throughput_rps"], rel=0.02), spec
+        assert b["avg_freq_ghz"] == pytest.approx(
+            a["avg_freq_ghz"], rel=0.01), spec
+        assert b["counters"]["type_changes"] == pytest.approx(
+            a["counters"]["type_changes"], rel=0.02), spec
+
+
+# ------------------------------------------------ execute_until properties
+
+
+CFG = FreqDomainConfig(grant_delay=500.0, hysteresis=2000.0,
+                       detect_delay=0.0, throttle_factor=0.75)
+
+level_seq = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=2),
+              st.booleans(),
+              st.floats(min_value=1.0, max_value=500_000.0)),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(level_seq)
+def test_execute_until_unbounded_equals_execute(seq):
+    """With no deadline, execute_until is execute (same arithmetic,
+    cycle count returned)."""
+    d1, d2 = FrequencyDomain(CFG), FrequencyDomain(CFG)
+    t1 = t2 = 0.0
+    for level, dense, cycles in seq:
+        t1 = d1.execute(t1, cycles, level, dense)
+        t2, done = d2.execute_until(t2, cycles, level, dense)
+        assert done == pytest.approx(cycles, rel=1e-12, abs=1e-6)
+    assert t1 == t2
+    assert d1.cycles_at_level == d2.cycles_at_level
+    assert d1.busy_time == d2.busy_time
+    assert d1.energy == d2.energy
+    assert d1.transitions == d2.transitions
+    assert (d1.level, d1.pending, d1.revert_at) == \
+        (d2.level, d2.pending, d2.revert_at)
+
+
+@settings(max_examples=60, deadline=None)
+@given(level_seq, st.integers(min_value=1, max_value=64))
+def test_execute_until_batched_equals_chunked(seq, n_chunks):
+    """One batched call == the same cycles fed through N sequential
+    execute calls: same end time, state machine, and accounting (float
+    accounting to tolerance — the additions associate differently)."""
+    d1, d2 = FrequencyDomain(CFG), FrequencyDomain(CFG)
+    t1 = t2 = 0.0
+    for level, dense, cycles in seq:
+        chunk = cycles / n_chunks
+        remaining = cycles
+        while remaining > 1e-9:
+            run = min(chunk, remaining)
+            t1 = d1.execute(t1, run, level, dense)
+            remaining -= run
+        t2, _ = d2.execute_until(t2, cycles, level, dense)
+        assert t2 == pytest.approx(t1, rel=1e-9, abs=1e-9)
+    assert d1.transitions == d2.transitions
+    assert (d1.level, d1.pending) == (d2.level, d2.pending)
+    if d1.revert_at is None:
+        assert d2.revert_at is None
+    else:
+        assert d2.revert_at == pytest.approx(d1.revert_at, rel=1e-9)
+    for i in range(CFG.n_levels):
+        assert d2.cycles_at_level[i] == pytest.approx(
+            d1.cycles_at_level[i], rel=1e-9, abs=1e-6)
+        assert d2.time_at_level[i] == pytest.approx(
+            d1.time_at_level[i], rel=1e-9, abs=1e-9)
+    assert d2.busy_time == pytest.approx(d1.busy_time, rel=1e-9)
+    assert d2.throttle_cycles == pytest.approx(
+        d1.throttle_cycles, rel=1e-9, abs=1e-6)
+    assert d2.energy == pytest.approx(d1.energy, rel=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(level_seq, st.floats(min_value=0.1, max_value=0.9))
+def test_execute_until_deadline_then_resume(seq, frac):
+    """Splitting one section at an arbitrary wall-clock deadline and
+    resuming the remaining cycles matches the unsplit execution."""
+    for level, dense, cycles in seq:
+        d1, d2 = FrequencyDomain(CFG), FrequencyDomain(CFG)
+        end1 = d1.execute(0.0, cycles, level, dense)
+        deadline = end1 * frac
+        mid, done = d2.execute_until(0.0, cycles, level, dense,
+                                     deadline=deadline)
+        assert mid <= deadline + 1e-9
+        if done < cycles:
+            assert mid == pytest.approx(deadline, rel=1e-12, abs=1e-9)
+        end2, done2 = d2.execute_until(mid, cycles - done, level, dense)
+        assert done + done2 == pytest.approx(cycles, rel=1e-9, abs=1e-6)
+        assert end2 == pytest.approx(end1, rel=1e-9, abs=1e-9)
+        assert d2.busy_time == pytest.approx(d1.busy_time, rel=1e-9)
+
+
+def test_save_restore_state_roundtrip():
+    d = FrequencyDomain(CFG)
+    d.execute(0.0, 1.9e3 * 700, 2, True)
+    snap = d.save_state()
+    before = (d.level, d.pending, d.revert_at, list(d.cycles_at_level),
+              d.busy_time, d.energy, len(d.events))
+    d.execute(700.0, 2.8e3 * 900, 0, False)
+    d.restore_state(snap)
+    after = (d.level, d.pending, d.revert_at, list(d.cycles_at_level),
+             d.busy_time, d.energy, len(d.events))
+    assert before == after
+
+
+# ---------------------------------------------------- run() resume bugfix
+
+
+def _one_shot(cycles):
+    yield Segment(cycles, IClass.SCALAR, stack=("t", "seg"))
+    yield RequestDone()
+
+
+def test_run_keeps_events_beyond_horizon():
+    """run(until) must leave events later than the horizon queued so a
+    resumed run processes them (the old loop popped-and-dropped one)."""
+    for strict in (False, True):
+        sim = Simulator(SchedConfig(n_cores=1, n_avx_cores=0,
+                                    specialization=False),
+                        strict_chunks=strict)
+        sim.add_task(Task(_one_shot(2.8e3 * 50), ttype=TaskType.SCALAR),
+                     at=100.0)
+        m = sim.run(until_us=10.0)      # arrival is beyond the horizon
+        assert m.completed == 0
+        m = sim.run(until_us=1_000.0)   # resume: the arrival must fire
+        assert m.completed == 1, f"strict={strict}"
+
+
+def test_metrics_percentile_cache_invalidation():
+    from repro.core.simulator import Metrics
+    m = Metrics()
+    m.latencies_us.extend([5.0, 1.0, 3.0])
+    assert m.p(0.5) == 3.0
+    m.latencies_us.append(0.5)          # append invalidates via length
+    assert m.p(0.0) == 0.5
+    assert m.p(1.0) == 5.0
+
+
+def test_serve_metrics_percentile_cache():
+    from repro.sched.engine import ServeMetrics
+    m = ServeMetrics()
+    m.itl_ms.extend([4.0, 2.0, 8.0])
+    assert m.p(m.itl_ms, 0.5) == 4.0
+    m.itl_ms.append(1.0)
+    assert m.p(m.itl_ms, 0.0) == 1.0
+    other = [7.0, 6.0]
+    assert m.p(other, 0.0) == 6.0       # independent list, its own cache
+    assert m.p(m.itl_ms, 1.0) == 8.0
+
+
+def test_parallel_matrix_identical_to_serial():
+    """scenario_matrix(parallel=N) fans legs over a process pool on the
+    shared frozen trace and must reassemble the exact serial matrix."""
+    import json
+
+    from repro.sched.replay import scenario_matrix
+    kw = dict(scenarios=["steady"], duration_ms=3_000.0, n_devices=8,
+              prefill_devices=2)
+    serial = scenario_matrix(**kw)
+    fanned = scenario_matrix(parallel=2, **kw)
+    assert json.dumps(serial, sort_keys=True) == \
+        json.dumps(fanned, sort_keys=True)
+
+
+def test_idle_kick_prefers_lowest_eligible_core():
+    """The lazy idle min-heaps must preserve the legacy policy: wake the
+    lowest-numbered idle core the policy allows for the task type."""
+    sim = Simulator(SchedConfig(n_cores=4, n_avx_cores=1,
+                                specialization=True))
+    # core 3 is the AVX core; an AVX arrival must wake it, not core 0
+    def avx_task():
+        yield Segment(1000.0, IClass.AVX512, dense=True)
+    t = Task(avx_task(), ttype=TaskType.AVX)
+    sim.add_task(t, 0.0)
+    sim.run(1_000.0)
+    assert t.last_core == 3
