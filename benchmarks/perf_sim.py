@@ -13,15 +13,20 @@ and event-horizon execution (the default) — across:
 
 plus the wall time of the full differential scenario matrix
 (``repro.sched.replay.scenario_matrix``) serial vs. fanned out across a
-process pool over the shared frozen traces.
+process pool over the shared frozen traces, and the cluster tier: every
+registered fleet scenario (CLUSTER_SCENARIOS) replayed through the
+N-shard ``ClusterEngine`` under the multi-node oracle
+(``repro.sched.replay.replay_cluster``), recording cluster throughput
+into the same artifact.
 
 Writes ``BENCH_simulator.json`` — the benchmark trajectory artifact.
 Wall-clock numbers are machine-dependent; the *event counts* per mode
 are deterministic, so the regression gate (``--check-baseline``)
 compares (a) the measured chunked->horizon speedup ratio against the
 committed baseline ratio (machine-independent to first order: both
-modes run on the same host) and (b) the deterministic horizon event
-counts, failing on a >30% regression of either.
+modes run on the same host), (b) the deterministic horizon event
+counts, and (c) the matrix parallel throughput (serial/parallel wall
+ratio — again a same-host ratio), failing on a >30% regression of any.
 
   PYTHONPATH=src python benchmarks/run.py perf --smoke \
       --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
@@ -94,8 +99,8 @@ def run_bench(smoke: bool = False, parallel: int = 0,
     # the CSV rows() path discards it)
     matrix_cell = None
     if matrix:
-        from repro.sched.replay import scenario_matrix
-        n_workers = parallel or (os.cpu_count() or 2)
+        from repro.sched.replay import default_workers, scenario_matrix
+        n_workers = parallel or default_workers()
         duration = 8_000.0 if smoke else 30_000.0
         kw = dict(duration_ms=duration, n_devices=8 if smoke else 16,
                   prefill_devices=2 if smoke else 4)
@@ -105,11 +110,46 @@ def run_bench(smoke: bool = False, parallel: int = 0,
         matrix_cell = {
             "duration_ms": duration,
             "workers": n_workers,
+            "cpu_count": os.cpu_count() or 1,
             "wall_s_serial": round(wall_serial, 3),
             "wall_s_parallel": round(wall_par, 3),
             "parallel_speedup": round(
                 wall_serial / max(wall_par, 1e-9), 2),
         }
+
+    # the cluster tier: every registered fleet scenario through the
+    # N-shard ClusterEngine under the multi-node oracle
+    from repro.sched.replay import replay_cluster
+    from repro.sched.workload import CLUSTER_SCENARIOS, scenario_trace
+    c_duration = 10_000.0 if smoke else 60_000.0
+    n_shards = 2 if smoke else 4
+    c_scen, c_req, c_wall = {}, 0, 0.0
+    for name in sorted(CLUSTER_SCENARIOS):
+        trace = scenario_trace(name, duration_ms=c_duration, seed=0)
+        res, wall = _time(lambda: replay_cluster(trace,
+                                                 n_shards=n_shards))
+        s = res["metrics"]
+        c_scen[name] = {
+            "wall_s": round(wall, 4),
+            "requests": len(trace.requests),
+            "completed": s["completed"],
+            "throughput_tok_s": round(s["throughput_tok_s"], 1),
+            "itl_p99_ms": round(s["itl_p99_ms"], 2),
+            "router_holds": s["router_holds"],
+            "n_violations": res["n_violations"],
+            "sim_ms_per_wall_s": round(
+                c_duration / max(wall, 1e-9), 1),
+        }
+        c_req += s["completed"]
+        c_wall += wall
+    cluster_cell = {
+        "duration_ms": c_duration,
+        "n_shards": n_shards,
+        "policy": "cluster-adaptive",
+        "scenarios": c_scen,
+        "req_per_wall_s": round(c_req / max(c_wall, 1e-9), 1),
+        "n_violations": sum(c["n_violations"] for c in c_scen.values()),
+    }
 
     speedups = [c["speedup"] for c in rows.values()]
     aggregate = {
@@ -130,7 +170,8 @@ def run_bench(smoke: bool = False, parallel: int = 0,
                   1e-9), 1),
     }
     return {"config": {"smoke": smoke}, "workloads": rows,
-            "matrix": matrix_cell, "aggregate": aggregate}
+            "matrix": matrix_cell, "cluster": cluster_cell,
+            "aggregate": aggregate}
 
 
 def check_baseline(result: dict, baseline: dict) -> list:
@@ -168,6 +209,34 @@ def check_baseline(result: dict, baseline: dict) -> list:
             f"{ceil:.0f} (baseline {b_agg['horizon_events_total']} "
             f"+ {REGRESSION_TOLERANCE:.0%}; events are deterministic — "
             f"this is a real throughput regression, not noise)")
+    # matrix parallel throughput: the serial/parallel wall ratio is a
+    # same-host ratio like the chunked/horizon speedup, so it transfers
+    # across machines to first order. The ratio is bounded by worker
+    # head-room, so only gate when the fresh run has at least as many
+    # workers as the baseline did (more workers must never be slower).
+    b_mat, r_mat = base.get("matrix"), result.get("matrix")
+    if b_mat and r_mat \
+            and r_mat.get("workers", 0) >= b_mat.get("workers", 0):
+        m_floor = b_mat["parallel_speedup"] * (1.0 - REGRESSION_TOLERANCE)
+        if r_mat["parallel_speedup"] < m_floor:
+            fails.append(
+                f"matrix parallel speedup {r_mat['parallel_speedup']} < "
+                f"{m_floor:.2f} (baseline {b_mat['parallel_speedup']} "
+                f"- {REGRESSION_TOLERANCE:.0%} at "
+                f"{b_mat['workers']} workers)")
+    b_cl, r_cl = base.get("cluster"), result.get("cluster")
+    if r_cl is not None and r_cl["n_violations"] > 0:
+        fails.append(
+            f"cluster replay reported {r_cl['n_violations']} oracle "
+            f"violations (must be 0)")
+    if b_cl and r_cl:
+        for name, cell in r_cl["scenarios"].items():
+            b_cell = b_cl["scenarios"].get(name)
+            if b_cell and cell["completed"] < b_cell["completed"]:
+                fails.append(
+                    f"cluster/{name} completed {cell['completed']} < "
+                    f"baseline {b_cell['completed']} (deterministic — "
+                    f"a real scheduling regression)")
     return fails
 
 
@@ -179,6 +248,10 @@ def rows(smoke: bool = True):
         yield (f"perf_{label}", cell["horizon"]["wall_s"] * 1e6,
                f"speedup={cell['speedup']}x "
                f"events={cell['event_reduction']}x")
+    for name, cell in result["cluster"]["scenarios"].items():
+        yield (f"perf_cluster/{name}", cell["wall_s"] * 1e6,
+               f"tok/s={cell['throughput_tok_s']} "
+               f"violations={cell['n_violations']}")
     agg = result["aggregate"]
     yield ("perf_geomean", 0, f"speedup={agg['speedup_geomean']}x")
 
@@ -209,7 +282,17 @@ def main(argv=None) -> int:
     if m is not None:
         print(f"{'matrix (serial -> parallel)':38s} "
               f"{m['wall_s_serial']:8.3f}s -> {m['wall_s_parallel']:8.3f}s "
-              f"({m['workers']} workers, {m['parallel_speedup']}x)")
+              f"({m['workers']} workers / {m['cpu_count']} cpus, "
+              f"{m['parallel_speedup']}x)")
+    cl = result["cluster"]
+    for name, cell in cl["scenarios"].items():
+        print(f"{'cluster/' + name:38s} wall={cell['wall_s']:8.3f}s "
+              f"tok/s={cell['throughput_tok_s']:8.1f} "
+              f"itl_p99={cell['itl_p99_ms']:6.1f}ms "
+              f"violations={cell['n_violations']}")
+    print(f"{'cluster (' + str(cl['n_shards']) + ' shards)':38s} "
+          f"{cl['req_per_wall_s']:.0f} req/wall-s, "
+          f"{cl['n_violations']} violations")
     agg = result["aggregate"]
     print(f"geomean speedup {agg['speedup_geomean']}x "
           f"(min {agg['speedup_min']}x, max {agg['speedup_max']}x); "

@@ -19,8 +19,11 @@ import time
 from pathlib import Path
 
 from repro.sched import SharedBaselinePolicy, SpecializedPolicy, Topology
+from repro.sched.cluster import (ClusterConfig, ClusterEngine,
+                                 ClusterTopology)
 from repro.sched.engine import (Engine, PoolModel, ServeConfig,
                                 pool_model_from_dryrun)
+from repro.sched.policy import make_cluster_policy
 from repro.sched.replay import headline_metrics
 from repro.sched.workload import poisson_workload, scenario_trace
 
@@ -29,7 +32,9 @@ DRYRUN = Path("results/dryrun.json")
 
 def run(arch: str = "codeqwen1.5-7b", n_devices: int = 16,
         prefill_devices: int = 4, duration_ms: float = 60_000.0,
-        util: float = 0.5, seed: int = 3, scenario: str = None):
+        util: float = 0.5, seed: int = 3, scenario: str = None,
+        cluster_shards: int = 2,
+        cluster_policy: str = "cluster-adaptive"):
     if DRYRUN.exists():
         pm = pool_model_from_dryrun(json.loads(DRYRUN.read_text()), arch)
     else:
@@ -66,6 +71,22 @@ def run(arch: str = "codeqwen1.5-7b", n_devices: int = 16,
         # the paper's metric: performance VARIABILITY (tail spread) —
         # one shared definition with the scenario-matrix harness
         out.update(headline_metrics(ns, sp))
+    if cluster_shards > 0:
+        # cluster leg: the same trace behind the frequency-aware router,
+        # N full-size nodes vs the single shared node above
+        cpol = make_cluster_policy(cluster_policy)
+        ct = ClusterTopology.homogeneous(cluster_shards, n_devices,
+                                         prefill_devices,
+                                         policy=cpol.shard_policy)
+        ceng = ClusterEngine(ct, cluster_policy, pm,
+                             ClusterConfig(serve=cfg))
+        cm = ceng.run(copy.deepcopy(wl), duration_ms)
+        out["cluster"] = cm.summary()
+        out["cluster_shards"] = cluster_shards
+        out["cluster_policy"] = cluster_policy
+        out["cluster_shard_summaries"] = cm.shard_summaries()
+        if ns["itl_p99_ms"] > 0:
+            out["cluster_vs_shared"] = headline_metrics(ns, out["cluster"])
     out["arch"] = arch
     out["rate_req_s"] = rate
     return out
@@ -76,9 +97,13 @@ def rows(duration_ms: float = 60_000.0, scenario: str = None):
     res = run(duration_ms=duration_ms, scenario=scenario)
     wall = (time.time() - t0) * 1e6 / 2
     out = []
-    for k in ("nospec", "spec"):
+    for k in ("nospec", "spec", "cluster"):
+        if k not in res:
+            continue
         s = res[k]
-        out.append((f"serving[{res['arch']}|{k}]", wall,
+        label = k if k != "cluster" \
+            else f"cluster{res['cluster_shards']}x"
+        out.append((f"serving[{res['arch']}|{label}]", wall,
                     f"itl_p50={s['itl_p50_ms']:.1f}ms "
                     f"itl_p99={s['itl_p99_ms']:.1f}ms "
                     f"ttft_p99={s['ttft_p99_ms']:.0f}ms "
@@ -91,6 +116,12 @@ def rows(duration_ms: float = 60_000.0, scenario: str = None):
                 f"{100 * res.get('itl_p99_reduction', 0):.0f}%"))
     out.append(("serving[itl_variability_reduction]", wall,
                 f"{100 * res.get('itl_variability_reduction', 0):.0f}%"))
+    cvs = res.get("cluster_vs_shared")
+    if cvs:
+        out.append(("serving[cluster_itl_p99_reduction]", wall,
+                    f"{100 * cvs['itl_p99_reduction']:.0f}%"))
+        out.append(("serving[cluster_variability_reduction]", wall,
+                    f"{100 * cvs['itl_variability_reduction']:.0f}%"))
     return out
 
 
@@ -116,6 +147,15 @@ def main(argv=None):
         assert res["nospec"]["completed"] > 0
         assert res["spec"]["completed"] > 0
         assert spread_sp < spread_ns, (spread_sp, spread_ns)
+        cvs = res.get("cluster_vs_shared")
+        if cvs:
+            print(f"smoke: cluster({res['cluster_shards']}x "
+                  f"{res['cluster_policy']}) "
+                  f"itl_p99_reduction={100 * cvs['itl_p99_reduction']:.0f}% "
+                  f"variability_reduction="
+                  f"{100 * cvs['itl_variability_reduction']:.0f}%")
+            assert res["cluster"]["completed"] > 0
+            assert cvs["itl_p99_reduction"] > 0, cvs
         print("smoke: OK")
         return
     for r in rows(scenario=args.scenario):

@@ -12,7 +12,10 @@ to the prefill pool of a two-pool ``Topology``.
       --requests 16 --prompt 64 --max-new 16
 
 ``--mode loop`` keeps the plain batched loop (no scheduler) for
-comparison.
+comparison; ``--mode cluster`` shards the engine across the dist
+layer — N shard engines behind the frequency-aware router
+(`repro.sched.cluster`), each shard's jitted prefill/decode executor
+running on its own ``DistContext`` mesh slice of the local devices.
 """
 import argparse
 import time
@@ -23,9 +26,10 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.static_analysis import rank_functions, report
-from repro.dist.context import no_dist
+from repro.dist.context import DistContext, make_dist, no_dist
 from repro.models.api import build_model
-from repro.sched import SpecializedPolicy, Topology
+from repro.sched import (ClusterConfig, ClusterEngine, ClusterTopology,
+                         SpecializedPolicy, Topology)
 from repro.sched.engine import Engine, Request, ServeConfig
 from repro.sched.workload import load_trace
 
@@ -171,6 +175,88 @@ def run_engine(args, cfg, model, params):
     return m
 
 
+def shard_contexts(n_shards: int) -> list:
+    """Partition the local devices into one ``DistContext`` per shard.
+
+    Shard ``i`` owns a contiguous slice of ``jax.devices()``; a slice
+    with more than one device becomes a data-parallel mesh
+    (``make_dist``), a single-device slice (the CPU case) runs under
+    ``no_dist()``. The cluster's shard placement therefore maps
+    directly onto dist-layer meshes: the router decides WHICH mesh a
+    request's prefill/decode executes on."""
+    devs = jax.devices()
+    per = max(1, len(devs) // n_shards)
+    ctxs: list[DistContext] = []
+    for i in range(n_shards):
+        chunk = devs[i * per:(i + 1) * per] or devs[-1:]
+        if len(chunk) > 1:
+            from jax.sharding import Mesh
+            ctxs.append(make_dist(Mesh(np.array(chunk), ("data",))))
+        else:
+            ctxs.append(no_dist())
+    return ctxs
+
+
+def run_cluster(args, cfg, model, params):
+    """Real-model cluster serving: N shards, each a two-pool engine
+    with its own jitted executor on its own device slice, behind the
+    SLO-aware router."""
+    P, N = args.prompt, args.max_new
+    max_seq = P + N
+    ranked = identify_heavy_phase(model, params, args.batch, P, max_seq)
+    print("[serve] static analysis (heavy-op report):")
+    print(report(ranked))
+    print(f"[serve] tagging {ranked[0].name!r} as the heavy phase; "
+          f"{args.shards}-shard cluster under {args.cluster_policy!r}\n")
+
+    cluster = ClusterTopology.homogeneous(args.shards, 2, 1)
+    ctxs = shard_contexts(args.shards)
+    executors = {}
+    for spec, ctx in zip(cluster.shards, ctxs):
+        # per-shard model bound to the shard's mesh slice; parameters
+        # are shared (same structure on every context)
+        shard_model = build_model(cfg, ctx) if ctx.active else model
+        executors[spec.name] = RealModelExecutor(
+            shard_model, params, cfg.vocab, P, max_seq, seed=args.seed)
+        mesh = f"mesh={tuple(ctx.mesh.shape.values())}" if ctx.active \
+            else "single-device"
+        print(f"[serve] {spec.name}: {spec.topology.n_units} pools units, "
+              f"{mesh}")
+
+    if args.workload:
+        trace = load_trace(args.workload, seed=args.seed)
+        reqs = [Request(rid=r.rid, arrive_ms=r.arrive_ms, prompt_len=P,
+                        max_new=N, tenant=r.tenant,
+                        deadline_window_ms=r.deadline_window_ms)
+                for r in trace.requests[:args.requests]]
+        print(f"[serve] workload {args.workload!r}: {len(reqs)} requests")
+    else:
+        interval_ms = 1000.0 / args.rate
+        reqs = [Request(rid=i, arrive_ms=i * interval_ms, prompt_len=P,
+                        max_new=N) for i in range(args.requests)]
+    ccfg = ClusterConfig(serve=ServeConfig(prefill_chunk=P,
+                                           decode_batch_max=args.batch))
+    eng = ClusterEngine(cluster, args.cluster_policy, cfg=ccfg,
+                        executors=executors)
+    t0 = time.time()
+    m = eng.run(reqs)               # no horizon: run to completion
+    wall = time.time() - t0
+    s = m.summary()
+    print(f"[serve] {s['completed']}/{len(reqs)} requests in "
+          f"{wall:.1f}s wall")
+    print(f"[serve] ttft_p50={s['ttft_p50_ms']:.1f}ms "
+          f"ttft_p99={s['ttft_p99_ms']:.1f}ms "
+          f"itl_p50={s['itl_p50_ms']:.1f}ms "
+          f"itl_p99={s['itl_p99_ms']:.1f}ms "
+          f"holds={s['router_holds']}")
+    for name, sh in m.shard_summaries().items():
+        print(f"[serve]   {name}: routed={sh['routed']} "
+              f"done={sh['completed']} f={sh['avg_freq_ghz']:.2f}GHz "
+              f"residency={sh['license_residency']:.2f} "
+              f"E={sh['energy_proxy']:.0f}")
+    return m
+
+
 def run_loop(args, cfg, model, params):
     """Plain batched loop (the pre-engine behaviour), kept for
     comparison."""
@@ -217,7 +303,14 @@ def run_loop(args, cfg, model, params):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--mode", choices=("engine", "loop"), default="engine")
+    ap.add_argument("--mode", choices=("engine", "loop", "cluster"),
+                    default="engine")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="cluster mode: number of engine shards")
+    ap.add_argument("--cluster-policy", default="cluster-adaptive",
+                    help="cluster mode: registered cluster policy "
+                         "(cluster-rr, cluster-queue, cluster-freq, "
+                         "cluster-adaptive)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
@@ -237,6 +330,8 @@ def main(argv=None):
     params = model.init(jax.random.key(args.seed))
     if args.mode == "engine":
         run_engine(args, cfg, model, params)
+    elif args.mode == "cluster":
+        run_cluster(args, cfg, model, params)
     else:
         run_loop(args, cfg, model, params)
 

@@ -1,28 +1,49 @@
 """Shared scheduling API: Topology (mechanism-agnostic pool layout),
 Policy (placement / stealing / preemption / resizing decisions), the
-event-driven serving engine, and the scenario workload subsystem.
+event-driven serving engine, the scenario workload subsystem, and the
+cluster tier (N engine shards behind a frequency-aware router).
 `core/muqss.py` (OS simulator) and `sched/engine.py` (serving) both
-consume this API; `sched/workload.py` generates seeded, JSON-replayable
-traces and `sched/replay.py` replays one trace differentially through
-every registered policy and both mechanisms."""
+consume this API; `sched/cluster.py` interleaves N engines on one heap
+behind SLO-aware admission control; `sched/workload.py` generates
+seeded, JSON-replayable traces and `sched/replay.py` replays one trace
+differentially through every registered policy and mechanism."""
+from repro.sched.cluster import (ClusterConfig, ClusterEngine,
+                                 ClusterMetrics, ClusterTopology, Router,
+                                 ShardSpec)
 from repro.sched.freq import (ENGINE_FREQ_MS, KV_HANDOFF_MS,
-                              FreqDomainConfig, FrequencyDomain)
-from repro.sched.policy import (POLICIES, AdaptivePolicy, CohortPolicy,
+                              FreqDomainConfig, FrequencyDomain,
+                              ResidencyWindow)
+from repro.sched.policy import (CLUSTER_POLICIES, POLICIES, AdaptivePolicy,
+                                ClusterAdaptivePolicy,
+                                ClusterFreqAwarePolicy, ClusterPolicy,
+                                ClusterRoundRobinPolicy, CohortPolicy,
                                 LoadSignals, Policy, SharedBaselinePolicy,
-                                SpecializedPolicy, TypeChangeDecision,
-                                light_penalty, make_policy, register_policy,
+                                ShardView, SpecializedPolicy,
+                                TypeChangeDecision, light_penalty,
+                                make_cluster_policy, make_policy,
+                                register_cluster_policy, register_policy,
+                                registered_cluster_policies,
                                 registered_policies)
 from repro.sched.topology import Pool, Topology, WorkKind
-from repro.sched.workload import (SCENARIOS, Tenant, Trace, WorkloadSpec,
-                                  poisson_workload, register_scenario,
-                                  scenario_spec, scenario_trace)
+from repro.sched.workload import (CLUSTER_SCENARIOS, SCENARIOS, Tenant,
+                                  Trace, WorkloadSpec, poisson_workload,
+                                  register_cluster_scenario,
+                                  register_scenario, scenario_spec,
+                                  scenario_trace)
 
 __all__ = [
-    "AdaptivePolicy", "CohortPolicy", "ENGINE_FREQ_MS", "FreqDomainConfig",
-    "FrequencyDomain", "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "Policy",
-    "Pool", "SCENARIOS", "SharedBaselinePolicy", "SpecializedPolicy",
-    "Tenant", "Topology", "Trace", "TypeChangeDecision", "WorkKind",
-    "WorkloadSpec", "light_penalty", "make_policy", "poisson_workload",
-    "register_policy", "register_scenario", "registered_policies",
+    "AdaptivePolicy", "CLUSTER_POLICIES", "CLUSTER_SCENARIOS",
+    "ClusterAdaptivePolicy", "ClusterConfig", "ClusterEngine",
+    "ClusterFreqAwarePolicy", "ClusterMetrics", "ClusterPolicy",
+    "ClusterRoundRobinPolicy", "ClusterTopology", "CohortPolicy",
+    "ENGINE_FREQ_MS", "FreqDomainConfig", "FrequencyDomain",
+    "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "Policy", "Pool",
+    "ResidencyWindow", "Router", "SCENARIOS", "SharedBaselinePolicy",
+    "ShardSpec", "ShardView", "SpecializedPolicy", "Tenant", "Topology",
+    "Trace", "TypeChangeDecision", "WorkKind", "WorkloadSpec",
+    "light_penalty", "make_cluster_policy", "make_policy",
+    "poisson_workload", "register_cluster_policy", "register_policy",
+    "register_cluster_scenario", "register_scenario",
+    "registered_cluster_policies", "registered_policies",
     "scenario_spec", "scenario_trace",
 ]

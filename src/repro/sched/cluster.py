@@ -1,0 +1,467 @@
+"""Cluster-scale serving: N engine shards behind a frequency-aware
+front-end router — the paper's mechanism, one level up.
+
+The paper confines AVX-induced frequency reduction to a core subset and
+migrates threads to absorb it. At cluster scale the same signal
+reappears as *per-node* frequency variation (Schuchart et al.: the
+problem shifts from power consumption to performance variation at
+scale), and the same mitigation applies: measure each node's license
+residency, and route/resize so frequency-reduced nodes shed the heavy
+work that keeps them reduced.
+
+Three pieces:
+
+  * :class:`ClusterTopology` — N shards, each a named
+    :class:`repro.sched.topology.Topology` plus the registered engine
+    policy that schedules inside it. Serializable (``to_dict`` /
+    ``from_dict``) like the single-node ``Topology``.
+  * :class:`Router` — SLO-aware admission control and placement.
+    Requests queue at the front-end in strict EDF order (earliest
+    deadline dispatches first — head-of-line, so admission is
+    monotone and auditable); placement asks the cluster policy to
+    score each shard's :class:`repro.sched.policy.ShardView` (queue
+    depth, per-window license residency, energy rate) and may HOLD the
+    head when every shard is saturated.
+  * :class:`ClusterEngine` — N shard :class:`repro.sched.engine.Engine`
+    instances interleaved on ONE global event heap. Each shard runs its
+    normal event loop but pushes through the cluster's injected sink,
+    so shard events, router arrivals and cluster observation windows
+    are globally time-ordered. Once per ``window_ms`` the cluster
+    closes every shard's load window (``Engine.load_signals`` with the
+    cluster override) and lets the cluster policy resize shards
+    cross-shard — ``AdaptivePolicy`` promoted to cluster level.
+
+Shard engines never self-resize in cluster mode (their
+``resize_interval_ms`` is forced to +inf); the cluster window is the
+only observer, so the §4.3 estimator sees clean, non-overlapping
+windows per shard.
+
+Real-model mode (`launch/serve.py --mode cluster`) maps each shard onto
+its own ``repro.dist.DistContext`` mesh slice so jitted prefill/decode
+executors run per-shard; the simulated mode used here prices work
+through the shared :class:`PoolModel` exactly like the single-node
+engine, so cluster runs replay deterministically under the oracle.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.sched.engine import (Engine, PoolModel, Request, ServeConfig,
+                                ServeMetrics)
+from repro.sched.freq import ResidencyWindow
+from repro.sched.policy import (ClusterPolicy, ShardView,
+                                make_cluster_policy, make_policy)
+from repro.sched.topology import Topology
+
+# Pseudo-shard name for cluster-level events (router arrivals and
+# observation windows) on the global heap. "@" sorts before any real
+# shard name and is rejected by ShardSpec validation, so it can never
+# collide.
+ROUTER = "@router"
+
+
+# ------------------------------------------------------------- topology
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """One shard: a named pool topology plus the registered engine
+    policy that schedules inside it."""
+    name: str
+    topology: Topology
+    policy: str = "specialized"
+
+    def __post_init__(self):
+        if not self.name or self.name.startswith("@"):
+            raise ValueError(f"invalid shard name {self.name!r}")
+
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    """Ordered, uniquely named shards. The cluster-scale analogue of
+    :class:`Topology`: shards partition the fleet's devices the way
+    pools partition a node's."""
+    shards: Tuple[ShardSpec, ...]
+
+    def __post_init__(self):
+        names = [s.name for s in self.shards]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate shard names in {names}")
+        if not self.shards:
+            raise ValueError("a cluster needs at least one shard")
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_units(self) -> int:
+        return sum(s.topology.n_units for s in self.shards)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.shards)
+
+    def shard(self, name: str) -> ShardSpec:
+        for s in self.shards:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+    # ----------------------------------------------------- serialization
+
+    def to_dict(self) -> Dict:
+        return {"shards": [{"name": s.name, "policy": s.policy,
+                            "topology": s.topology.to_dict()}
+                           for s in self.shards]}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "ClusterTopology":
+        return ClusterTopology(tuple(
+            ShardSpec(s["name"], Topology.from_dict(s["topology"]),
+                      s["policy"])
+            for s in d["shards"]))
+
+    # -------------------------------------------------------- factories
+
+    @staticmethod
+    def homogeneous(n_shards: int, devices_per_shard: int,
+                    prefill_devices: int, *,
+                    policy: str = "specialized",
+                    prefix: str = "shard") -> "ClusterTopology":
+        """N identical serving shards (prefill/decode split each) —
+        the canonical scale-out layout benchmarks and tests use."""
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        return ClusterTopology(tuple(
+            ShardSpec(f"{prefix}{i}",
+                      Topology.serving(devices_per_shard, prefill_devices),
+                      policy)
+            for i in range(n_shards)))
+
+    @staticmethod
+    def shared_pool(n_shards: int, devices_per_shard: int, *,
+                    prefix: str = "shard") -> "ClusterTopology":
+        """N shared-pool shards (no specialization inside a shard) —
+        the frequency-blind scale-out baseline."""
+        return ClusterTopology(tuple(
+            ShardSpec(f"{prefix}{i}", Topology.shared(devices_per_shard),
+                      "shared")
+            for i in range(n_shards)))
+
+
+# --------------------------------------------------------------- config
+
+
+@dataclass
+class ClusterConfig:
+    """Cluster-level knobs; per-shard engine knobs live in ``serve``.
+
+    ``admit_per_unit`` bounds each shard's resident backlog (waiting +
+    active + in-flight + routed-not-yet-arrived) to
+    ``ceil(admit_per_unit * shard.n_units)`` — the router holds the EDF
+    head above that, which is what makes admission auditable."""
+    admit_per_unit: float = 2.0
+    window_ms: float = 1000.0          # observation / reshard cadence
+    serve: ServeConfig = field(default_factory=ServeConfig)
+
+    def shard_serve_config(self) -> ServeConfig:
+        """Per-shard engine config: identical knobs, but shard engines
+        never self-resize — the cluster window is the only observer of
+        their load signals."""
+        s = self.serve
+        return ServeConfig(prefill_chunk=s.prefill_chunk,
+                           decode_batch_max=s.decode_batch_max,
+                           deadline_window_ms=s.deadline_window_ms,
+                           resize_interval_ms=float("inf"),
+                           freq=s.freq)
+
+    def admit_limit(self, topo: Topology) -> int:
+        return max(1, int(-(-self.admit_per_unit * topo.n_units // 1)))
+
+
+# -------------------------------------------------------------- metrics
+
+
+def _pctl(sorted_xs: List[float], q: float) -> float:
+    if not sorted_xs:
+        return 0.0
+    return sorted_xs[min(int(q * len(sorted_xs)), len(sorted_xs) - 1)]
+
+
+@dataclass
+class ClusterMetrics:
+    """Aggregated cluster run: per-shard :class:`ServeMetrics` plus
+    router accounting. ``summary()`` speaks the same keys as
+    ``ServeMetrics.summary()`` so headline derivations
+    (`repro.sched.replay.headline_metrics`) apply unchanged."""
+    shard_metrics: Dict[str, ServeMetrics] = field(default_factory=dict)
+    total_ms: float = 0.0
+    routed: Dict[str, int] = field(default_factory=dict)
+    router_holds: int = 0              # dispatch attempts that held the head
+    router_max_queue: int = 0
+    router_wait_ms: List[float] = field(default_factory=list)
+    resize_events: List[Tuple[float, str, Dict[str, int]]] = \
+        field(default_factory=list)
+
+    def summary(self) -> Dict[str, float]:
+        ms = self.shard_metrics.values()
+        itl = sorted(x for m in ms for x in m.itl_ms)
+        ttft = sorted(x for m in ms for x in m.ttft_ms)
+        freq = [f for m in ms for f in m.pool_freq.values()]
+        busy = sum(f["busy"] for f in freq)
+        rwait = sorted(self.router_wait_ms)
+        return {
+            "throughput_tok_s": 1000.0 * len(itl) / self.total_ms
+            if self.total_ms else 0.0,
+            "ttft_p50_ms": _pctl(ttft, 0.5),
+            "ttft_p99_ms": _pctl(ttft, 0.99),
+            "itl_p50_ms": _pctl(itl, 0.5),
+            "itl_p99_ms": _pctl(itl, 0.99),
+            "completed": sum(m.completed for m in ms),
+            "steals": sum(m.steals for m in ms),
+            "handoffs": sum(m.handoffs for m in ms),
+            "resizes": len(self.resize_events),
+            "avg_freq_ghz": sum(f["avg_freq_ghz"] * f["busy"]
+                                for f in freq) / busy if busy else 0.0,
+            "license_residency": sum(f["reduced"] for f in freq) / busy
+            if busy else 0.0,
+            "throttled_ms": sum(f["throttled"] for f in freq),
+            "freq_transitions": sum(f["transitions"] for f in freq),
+            "energy_proxy": sum(f["energy_proxy"] for f in freq),
+            "router_holds": self.router_holds,
+            "router_max_queue": self.router_max_queue,
+            "router_wait_p99_ms": _pctl(rwait, 0.99),
+        }
+
+    def shard_summaries(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        for name, m in self.shard_metrics.items():
+            s = m.summary()
+            s["routed"] = self.routed.get(name, 0)
+            out[name] = s
+        return out
+
+
+# ---------------------------------------------------------------- router
+
+
+class Router:
+    """SLO-aware front-end: strict-EDF admission + policy placement.
+
+    Requests wait in an EDF heap keyed by their engine deadline
+    (``arrive_ms + deadline_window_ms`` — the trace arrival, so router
+    queueing eats into the SLO budget rather than resetting it). Only
+    the head may dispatch; when no shard admits it, the whole queue
+    holds — later-deadline work never overtakes (the monotone-admission
+    invariant the oracle audits)."""
+
+    def __init__(self, policy: ClusterPolicy, default_window_ms: float,
+                 oracle=None):
+        self.policy = policy
+        self.default_window_ms = default_window_ms
+        self.oracle = oracle
+        self._q: List[Tuple[float, int, Request]] = []
+        self.n_arrived = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def arrive(self, t: float, r: Request) -> None:
+        window = self.default_window_ms if r.deadline_window_ms is None \
+            else r.deadline_window_ms
+        deadline = r.arrive_ms + window
+        self.n_arrived += 1
+        if self.oracle is not None:
+            self.oracle.on_router_arrive(t, r, deadline)
+        heapq.heappush(self._q, (deadline, r.rid, r))
+
+    def dispatch(self, t: float, views: Tuple[ShardView, ...]
+                 ) -> Optional[Tuple[str, Request]]:
+        """Try to place the EDF head; returns ``(shard, request)`` or
+        None (empty queue, or every shard refused — a HOLD)."""
+        if not self._q:
+            return None
+        head = self._q[0][2]
+        target = self.policy.place(views, head)
+        if self.oracle is not None:
+            self.oracle.on_dispatch(t, head, views, target, self._q)
+        if target is None:
+            return None
+        heapq.heappop(self._q)
+        return target, head
+
+
+# -------------------------------------------------------- cluster engine
+
+
+class ClusterEngine:
+    """N shard engines + a router on ONE global event heap.
+
+    Event tuples are ``(t, seq, shard, kind, payload)``: shard engines
+    push through the injected sink (``Engine.begin_run(push=...)``), the
+    router contributes ``(ROUTER, "route", request)`` arrivals and the
+    cluster its periodic ``(ROUTER, "window", None)`` observation
+    events. One pop loop dispatches each event back to its shard's
+    ``handle`` — N engines interleave in exact global time order, and
+    after every event the router re-tries its head (a completion on any
+    shard can unblock admission)."""
+
+    def __init__(self, cluster: ClusterTopology, policy_name: str,
+                 model: Optional[PoolModel] = None,
+                 cfg: Optional[ClusterConfig] = None,
+                 executors: Optional[Dict[str, object]] = None):
+        """``executors`` maps shard name -> live executor (real-model
+        mode: each shard's jitted prefill/decode runs on that shard's
+        ``repro.dist.DistContext`` mesh slice and reports measured
+        durations); None prices work through the shared PoolModel."""
+        self.cluster = cluster
+        self.policy_name = policy_name
+        self.policy = make_cluster_policy(policy_name)
+        self.model = model or PoolModel()
+        self.cfg = cfg or ClusterConfig()
+        serve_cfg = self.cfg.shard_serve_config()
+        executors = executors or {}
+        self.engines: Dict[str, Engine] = {
+            s.name: Engine(s.topology, make_policy(s.policy), self.model,
+                           serve_cfg, executor=executors.get(s.name),
+                           name=s.name)
+            for s in cluster.shards}
+
+    # ------------------------------------------------------------- run
+
+    def run(self, requests: List[Request],
+            horizon_ms: Optional[float] = None,
+            oracle=None) -> ClusterMetrics:
+        """Replay ``requests`` through the router + shards. ``oracle``
+        (see ``repro.sched.replay.ClusterOracle``) carries one
+        per-shard engine oracle each shard binds to, plus router
+        hooks."""
+        horizon = float("inf") if horizon_ms is None else horizon_ms
+        heap: List[Tuple[float, int, str, str, object]] = []
+        seq = 0
+
+        def push(eng, t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, eng.name, kind, payload))
+            seq += 1
+
+        router_oracle = getattr(oracle, "router", None)
+        router = Router(self.policy, self.cfg.serve.deadline_window_ms,
+                        router_oracle)
+        engines = self.engines
+        for name, eng in engines.items():
+            shard_oracle = oracle.shard(name) if oracle is not None \
+                else None
+            eng.begin_run([], horizon_ms, oracle=shard_oracle, push=push)
+        # requests routed to a shard whose "arrive" event has not popped
+        # yet: counted into the shard's view depth so back-to-back
+        # dispatches at one instant see each other's placements
+        pending: Dict[str, int] = {n: 0 for n in engines}
+        routed: Dict[str, int] = {n: 0 for n in engines}
+        dispatch_t: Dict[int, float] = {}
+        m = ClusterMetrics(routed=routed)
+        # per-shard routing windows over the live frequency domains;
+        # rolled at every cluster window event
+        route_win = {n: ResidencyWindow(engines[n].domains)
+                     for n in engines}
+        win_t0 = 0.0
+
+        def views(t: float) -> Tuple[ShardView, ...]:
+            out = []
+            for name in self.cluster.names:
+                eng = engines[name]
+                deltas = route_win[name].peek()
+                busy = sum(d["busy"] for d in deltas.values())
+                reduced = sum(d["reduced"] for d in deltas.values())
+                energy = sum(d["energy"] for d in deltas.values())
+                elapsed = t - win_t0
+                out.append(ShardView(
+                    name=name,
+                    n_units=eng.topo.n_units,
+                    heavy_units=eng.topo.heavy_units,
+                    queue_depth=eng.queue_depth() + pending[name],
+                    admit_limit=self.cfg.admit_limit(eng.topo),
+                    license_residency=reduced / busy if busy else 0.0,
+                    energy_rate=energy / elapsed if elapsed > 0 else 0.0,
+                    reduced_now=any(
+                        d.speed_ghz(t) < d.cfg.freqs_ghz[0] - 1e-12
+                        for d in eng.domains.values())))
+            return tuple(out)
+
+        def drain_router(t: float):
+            if not len(router):     # fast path: called after every event
+                return
+            while True:
+                placed = router.dispatch(t, views(t))
+                if placed is None:
+                    if len(router):
+                        m.router_holds += 1
+                    break
+                target, r = placed
+                pending[target] += 1
+                routed[target] += 1
+                dispatch_t[r.rid] = t
+                engines[target]._push(t, "arrive", r)
+            m.router_max_queue = max(m.router_max_queue, len(router))
+
+        def window(t: float):
+            nonlocal win_t0
+            signals, topologies = {}, {}
+            for name, eng in engines.items():
+                sig = eng.load_signals(t, min_window_ms=1e-9)
+                if sig is not None:
+                    signals[name] = sig
+                topologies[name] = eng.topo
+            for name, new in sorted(
+                    self.policy.reshard(topologies, signals).items()):
+                engines[name].apply_topology(t, new)
+                m.resize_events.append(
+                    (t, name, {p.name: p.n_units for p in new}))
+            for w in route_win.values():
+                w.roll()
+            win_t0 = t
+
+        for r in sorted(requests, key=lambda r: r.arrive_ms):
+            push(_RouterTag(), r.arrive_ms, "route", r)
+        if self.cfg.window_ms > 0 and horizon != float("inf"):
+            t_win = self.cfg.window_ms
+            while t_win < horizon:
+                push(_RouterTag(), t_win, "window", None)
+                t_win += self.cfg.window_ms
+
+        last_t = 0.0
+        while heap:
+            t, _, shard, kind, payload = heapq.heappop(heap)
+            if t >= horizon:
+                break
+            last_t = t
+            if shard == ROUTER:
+                if kind == "route":
+                    router.arrive(t, payload)
+                else:
+                    window(t)
+                drain_router(t)
+                continue
+            if kind == "arrive":
+                pending[shard] -= 1
+                w = dispatch_t.pop(payload.rid, None)
+                if w is not None:
+                    m.router_wait_ms.append(t - payload.arrive_ms)
+            engines[shard].handle(t, kind, payload)
+            drain_router(t)
+
+        for name, eng in engines.items():
+            m.shard_metrics[name] = eng.finish()
+        m.total_ms = horizon if horizon != float("inf") else last_t
+        if oracle is not None:
+            oracle.on_end(m, router)
+        return m
+
+
+class _RouterTag:
+    """Duck-typed event source so cluster-level events ride the same
+    injected sink signature as shard engines."""
+    name = ROUTER

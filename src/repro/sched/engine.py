@@ -42,7 +42,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.sched.freq import (ENGINE_FREQ_MS, KV_HANDOFF_MS,
-                              FreqDomainConfig, FrequencyDomain)
+                              FreqDomainConfig, FrequencyDomain,
+                              ResidencyWindow)
 from repro.sched.policy import LoadSignals, Policy
 from repro.sched.topology import Topology, WorkKind
 
@@ -201,22 +202,148 @@ class Engine:
     wake on the events that can give them work (arrivals for
     heavy-eligible pools, handoffs/evictions for the target pool), so
     simulated time advances directly between events.
+
+    The engine is *shard-embeddable*: the run lifecycle is split into
+    ``begin_run`` / ``handle`` / ``finish`` with an injectable event
+    sink, so a :class:`repro.sched.cluster.ClusterEngine` can interleave
+    N engines on ONE global heap — each shard pushes its events through
+    the cluster's sink instead of a private heap, and the cluster loop
+    dispatches popped events back to ``shard.handle``. Standalone
+    ``run()`` wraps the same three phases around a private heap, so
+    single-node behaviour is bit-identical to the pre-shard engine.
     """
 
     def __init__(self, topology: Topology, policy: Policy,
                  model: Optional[PoolModel] = None,
                  cfg: Optional[ServeConfig] = None,
-                 executor: Optional[object] = None):
+                 executor: Optional[object] = None,
+                 name: str = "engine"):
         self._topo0 = topology          # every run starts from this
         self.topo = topology
         self.policy = policy
         self.model = model or PoolModel()
         self.cfg = cfg or ServeConfig()
         self.executor = executor
+        self.name = name                # shard id in cluster mode
         self.oracle = None              # set per run()
         self.domains: Dict[str, FrequencyDomain] = {}   # set per run()
 
-    # ------------------------------------------------------------- run
+    # --------------------------------------------------- run lifecycle
+
+    def begin_run(self, requests: List[Request],
+                  horizon_ms: Optional[float] = None,
+                  oracle: Optional[object] = None,
+                  push=None) -> None:
+        """Reset per-run state and enqueue ``requests`` as arrivals.
+
+        ``push`` is the event sink: ``None`` uses a private heap (the
+        standalone ``run()`` loop); a cluster passes
+        ``push(engine, t, kind, payload)`` so shard events land on the
+        shared heap, globally ordered with every other shard's."""
+        cfg = self.cfg
+        self.topo = self._topo0         # resizes do not leak across runs
+        self.oracle = orc = oracle
+        if orc is not None:
+            orc.bind(self)
+        self.m = ServeMetrics()
+        self.horizon = float("inf") if horizon_ms is None else horizon_ms
+        self._n_units = {p.name: p.n_units for p in self.topo}
+        self._active = {p.name: [] for p in self.topo}
+        # one frequency domain per pool, fresh per run (license state
+        # must not leak across replays); per-span recording only when an
+        # oracle wants to audit the frequency trace
+        self.domains = {p.name: FrequencyDomain(cfg.freq,
+                                                record=orc is not None)
+                        for p in self.topo}
+        self._idle = set(self._n_units)
+        self._waiting: List[Tuple[float, int, Request]] = []   # EDF heap
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._ext_push = push
+        self.n_inflight = 0             # requests inside a handoff copy
+        # resize window accumulators; the reduced-frequency window
+        # (ResidencyWindow) measures the license residency the adaptive
+        # policy sizes pools from
+        self._win_start = 0.0
+        self._win_busy = {"heavy": 0.0, "light": 0.0}
+        self._win_handoffs = 0
+        self._win_freq = ResidencyWindow(self.domains)
+        self._last_t = 0.0
+        for r in sorted(requests, key=lambda r: r.arrive_ms):
+            self._push(r.arrive_ms, "arrive", r)
+
+    def _push(self, t: float, kind: str, payload):
+        if self._ext_push is not None:
+            self._ext_push(self, t, kind, payload)
+        else:
+            heapq.heappush(self._events, (t, self._seq, kind, payload))
+            self._seq += 1
+
+    def queue_depth(self) -> int:
+        """Waiting + active + in-flight requests resident on this
+        engine — the router's per-shard backlog signal."""
+        return len(self._waiting) + self.n_inflight \
+            + sum(len(a) for a in self._active.values())
+
+    def handle(self, t: float, kind: str, payload) -> None:
+        """Process one popped event. The caller (standalone loop or
+        cluster) owns the horizon check."""
+        self._last_t = t
+        self._maybe_resize(t)
+        orc = self.oracle
+        if kind == "arrive":
+            r: Request = payload
+            window = self.cfg.deadline_window_ms \
+                if r.deadline_window_ms is None else r.deadline_window_ms
+            r.deadline = r.arrive_ms + window
+            if orc is not None:
+                orc.on_arrive(t, r)
+            heapq.heappush(self._waiting, (r.deadline, r.rid, r))
+            # wake by policy eligibility, not topology capability: a
+            # permissive policy over a split topology runs prefill
+            # everywhere
+            for p in self.topo.pools:
+                if self.policy.eligible(self.topo, p, WorkKind.HEAVY):
+                    self._wake(p.name, t)
+            return
+        if kind == "deliver":
+            target, reqs = payload
+            self._active[target].extend(reqs)
+            self.n_inflight -= len(reqs)
+            self._wake(target, t)
+            return
+        if kind == "freq":
+            # explicit license transition (grant or revert) at its
+            # boundary — applied even while the pool is idle, so
+            # residency timelines and transition counts are exact
+            d = self.domains[payload]
+            d.advance(t)
+            if orc is not None:
+                fn = getattr(orc, "on_freq", None)
+                if fn is not None:
+                    fn(t, payload, d)
+            self._sched_freq(payload, t)
+            return
+        pool: str = payload
+        free_at = self._step(pool, t)
+        if free_at is None:
+            if orc is not None:
+                orc.on_idle(t, pool, len(self._waiting),
+                            len(self._active[pool]))
+            self._idle.add(pool)
+        else:
+            self._push(free_at, "step", pool)
+        self._sched_freq(pool, t)
+
+    def finish(self) -> ServeMetrics:
+        m = self.m
+        m.total_ms = self.horizon if self.horizon != float("inf") \
+            else self._last_t
+        for name, d in self.domains.items():
+            m.pool_freq[name] = d.snapshot()
+        if self.oracle is not None:
+            self.oracle.on_end(m)
+        return m
 
     def run(self, requests: List[Request],
             horizon_ms: Optional[float] = None,
@@ -225,210 +352,146 @@ class Engine:
         ``repro.sched.replay.EngineOracle``) observes every scheduling
         event and checks engine invariants — EDF order, one handoff per
         pool transfer, work conservation, capability respect."""
-        cfg, policy = self.cfg, self.policy
-        self.topo = self._topo0         # resizes do not leak across runs
-        self.oracle = orc = oracle
-        if orc is not None:
-            orc.bind(self)
-        m = ServeMetrics()
-        horizon = float("inf") if horizon_ms is None else horizon_ms
-        n_units: Dict[str, int] = {p.name: p.n_units for p in self.topo}
-        active: Dict[str, List[Request]] = {p.name: [] for p in self.topo}
-        # one frequency domain per pool, fresh per run (license state
-        # must not leak across replays); per-span recording only when an
-        # oracle wants to audit the frequency trace
-        self.domains = {p.name: FrequencyDomain(cfg.freq,
-                                                record=orc is not None)
-                        for p in self.topo}
-        idle = set(n_units)
-        waiting: List[Tuple[float, int, Request]] = []   # EDF heap
-        events: List[Tuple[float, int, str, object]] = []
-        seq = 0
-
-        def push(t: float, kind: str, payload):
-            nonlocal seq
-            heapq.heappush(events, (t, seq, kind, payload))
-            seq += 1
-
-        def sched_freq(pool: str, t: float):
-            """Schedule the pool's next license transition (grant or
-            revert) as an explicit heap event, so level changes apply at
-            their boundary even while the pool is idle."""
-            nxt = self.domains[pool].next_event(t)
-            if nxt is not None:
-                push(nxt, "freq", pool)
-
-        def wake(pool: str, t: float):
-            if pool in idle:
-                idle.discard(pool)
-                push(t, "step", pool)
-
-        for r in sorted(requests, key=lambda r: r.arrive_ms):
-            push(r.arrive_ms, "arrive", r)
-
-        # resize window accumulators
-        win_start = 0.0
-        win_busy = {"heavy": 0.0, "light": 0.0}
-        win_handoffs = 0
-        # reduced-frequency time per pool at window start: the delta
-        # over the window is the MEASURED license residency the
-        # adaptive policy sizes pools from
-        win_reduced = {p: d.reduced_time() for p, d in self.domains.items()}
-        last_t = 0.0
-
-        def transfer(reqs: List[Request], src: str, target: str, t: float):
-            """Move decoding requests between pools: one handoff each.
-
-            Delivery is an event at ``t`` (the handoff completion time),
-            not an immediate list append: a busy target pool must not
-            see — and decode — a request before its prefill+handoff has
-            finished in simulated time. (The immediate-append version
-            produced negative inter-token latencies; the replay oracle's
-            monotonicity check caught it.)"""
-            nonlocal win_handoffs
-            if not reqs:
-                return
-            if orc is not None:
-                orc.on_transfer(t, reqs, src, target)
-            m.handoffs += len(reqs)
-            win_handoffs += len(reqs)
-            push(t, "deliver", (target, list(reqs)))
-
-        def maybe_resize(t: float):
-            nonlocal win_start, win_handoffs, win_busy, win_reduced
-            window = t - win_start
-            if window < cfg.resize_interval_ms:
-                return
-            busy = win_busy["heavy"] + win_busy["light"]
-            total = sum(n_units.values())
-            heavy_pools = self.topo.pools_with(WorkKind.HEAVY)
-            reduced = sum(
-                self.domains[p.name].reduced_time()
-                - win_reduced.get(p.name, 0.0) for p in heavy_pools)
-            sig = LoadSignals(
-                heavy_share=win_busy["heavy"] / busy if busy else 0.0,
-                light_share=win_busy["light"] / busy if busy else 0.0,
-                utilization=busy / (window * total) if total else 0.0,
-                type_changes_per_s=2e3 * win_handoffs / window,
-                heavy_residency=min(
-                    win_busy["heavy"] / window / max(
-                        sum(n_units[p.name] for p in heavy_pools), 1),
-                    1.0),
-                license_residency=min(
-                    reduced / window / max(len(heavy_pools), 1), 1.0),
-                window_ms=window)
-            win_start, win_handoffs = t, 0
-            win_busy = {"heavy": 0.0, "light": 0.0}
-            win_reduced = {p: d.reduced_time()
-                           for p, d in self.domains.items()}
-            new = self.policy.resize(self.topo, sig)
-            if new is None:
-                return
-            self.topo = new
-            for p in new:
-                n_units[p.name] = p.n_units
-            m.resize_events.append((t, dict(n_units)))
-
-        def charge(pool: str, kind: str, ms: float):
-            m.charge(pool, kind, ms)
-            # resize signals accumulate device-ms, not pool-ms: the work
-            # mix must read the same whatever the current pool split is
-            win_busy[kind] += ms * n_units[pool]
-
-        def step(pool: str, t: float) -> Optional[float]:
-            """Run one scheduling decision; return the pool-free time or
-            None when the pool found nothing to do."""
-            pobj = self.topo.pool(pool)
-            if waiting and policy.eligible(self.topo, pobj, WorkKind.HEAVY):
-                # heavy work waits for this pool: stolen light work leaves
-                # (the paper's IPI preemption of scalar tasks on AVX cores)
-                if active[pool] and policy.on_type_change(
-                        self.topo, pobj,
-                        WorkKind.LIGHT).yield_if_heavy_waiting:
-                    evicted, active[pool] = active[pool], []
-                    target = next((n for n in policy.placement(
-                        self.topo, WorkKind.LIGHT) if n != pool), None)
-                    if target is not None:
-                        transfer(evicted, pool, target, t)
-                    else:
-                        active[pool] = evicted
-                end = t
-                burst = max(1, policy.heavy_burst(self.topo, pobj))
-                for _ in range(burst):
-                    if not waiting:
-                        break
-                    end = self._prefill_chunk(pool, n_units[pool], end,
-                                              waiting, active, m, charge,
-                                              transfer)
-                return end
-            if active[pool]:
-                if pool not in policy.placement(self.topo, WorkKind.LIGHT):
-                    m.steals += 1       # heavy pool running decode batches
-                return self._decode_round(pool, n_units[pool], t, active,
-                                          m, charge)
-            return None
-
+        self.begin_run(requests, horizon_ms, oracle)
+        events = self._events
         while events:
             t, _, kind, payload = heapq.heappop(events)
-            if t >= horizon:
+            if t >= self.horizon:
                 break
-            last_t = t
-            maybe_resize(t)
-            if kind == "arrive":
-                r: Request = payload
-                window = cfg.deadline_window_ms \
-                    if r.deadline_window_ms is None else r.deadline_window_ms
-                r.deadline = r.arrive_ms + window
-                if orc is not None:
-                    orc.on_arrive(t, r)
-                heapq.heappush(waiting, (r.deadline, r.rid, r))
-                # wake by policy eligibility, not topology capability: a
-                # permissive policy over a split topology runs prefill
-                # everywhere
-                for p in self.topo.pools:
-                    if policy.eligible(self.topo, p, WorkKind.HEAVY):
-                        wake(p.name, t)
-                continue
-            if kind == "deliver":
-                target, reqs = payload
-                active[target].extend(reqs)
-                wake(target, t)
-                continue
-            if kind == "freq":
-                # explicit license transition (grant or revert) at its
-                # boundary — applied even while the pool is idle, so
-                # residency timelines and transition counts are exact
-                d = self.domains[payload]
-                d.advance(t)
-                if orc is not None:
-                    fn = getattr(orc, "on_freq", None)
-                    if fn is not None:
-                        fn(t, payload, d)
-                sched_freq(payload, t)
-                continue
-            pool: str = payload
-            free_at = step(pool, t)
-            if free_at is None:
-                if orc is not None:
-                    orc.on_idle(t, pool, len(waiting), len(active[pool]))
-                idle.add(pool)
-            else:
-                push(free_at, "step", pool)
-            sched_freq(pool, t)
+            self.handle(t, kind, payload)
+        return self.finish()
 
-        m.total_ms = horizon if horizon != float("inf") else last_t
-        for name, d in self.domains.items():
-            m.pool_freq[name] = d.snapshot()
-        if orc is not None:
-            orc.on_end(m)
-        return m
+    # -------------------------------------------------- event internals
+
+    def _sched_freq(self, pool: str, t: float):
+        """Schedule the pool's next license transition (grant or
+        revert) as an explicit heap event, so level changes apply at
+        their boundary even while the pool is idle."""
+        nxt = self.domains[pool].next_event(t)
+        if nxt is not None:
+            self._push(nxt, "freq", pool)
+
+    def _wake(self, pool: str, t: float):
+        if pool in self._idle:
+            self._idle.discard(pool)
+            self._push(t, "step", pool)
+
+    def _transfer(self, reqs: List[Request], src: str, target: str,
+                  t: float):
+        """Move decoding requests between pools: one handoff each.
+
+        Delivery is an event at ``t`` (the handoff completion time),
+        not an immediate list append: a busy target pool must not
+        see — and decode — a request before its prefill+handoff has
+        finished in simulated time. (The immediate-append version
+        produced negative inter-token latencies; the replay oracle's
+        monotonicity check caught it.)"""
+        if not reqs:
+            return
+        if self.oracle is not None:
+            self.oracle.on_transfer(t, reqs, src, target)
+        self.m.handoffs += len(reqs)
+        self._win_handoffs += len(reqs)
+        self.n_inflight += len(reqs)
+        self._push(t, "deliver", (target, list(reqs)))
+
+    def load_signals(self, t: float,
+                     min_window_ms: Optional[float] = None
+                     ) -> Optional[LoadSignals]:
+        """Windowed load observation over [win_start, t), or None while
+        the window is still shorter than ``resize_interval_ms`` (or the
+        explicit ``min_window_ms`` override). Closing the window resets
+        the accumulators — the caller decides the cadence: the engine's
+        own event loop uses the config interval, while a cluster sets
+        the shard interval to +inf and reads signals on ITS window via
+        the override (so shard engines never self-resize or consume the
+        window the cluster is about to observe)."""
+        cfg = self.cfg
+        window = t - self._win_start
+        if window < (cfg.resize_interval_ms if min_window_ms is None
+                     else min_window_ms):
+            return None
+        win_busy, n_units = self._win_busy, self._n_units
+        busy = win_busy["heavy"] + win_busy["light"]
+        total = sum(n_units.values())
+        heavy_pools = self.topo.pools_with(WorkKind.HEAVY)
+        reduced = self._win_freq.peek_reduced(
+            p.name for p in heavy_pools)
+        sig = LoadSignals(
+            heavy_share=win_busy["heavy"] / busy if busy else 0.0,
+            light_share=win_busy["light"] / busy if busy else 0.0,
+            utilization=busy / (window * total) if total else 0.0,
+            type_changes_per_s=2e3 * self._win_handoffs / window,
+            heavy_residency=min(
+                win_busy["heavy"] / window / max(
+                    sum(n_units[p.name] for p in heavy_pools), 1),
+                1.0),
+            license_residency=min(
+                reduced / window / max(len(heavy_pools), 1), 1.0),
+            window_ms=window)
+        self._win_start, self._win_handoffs = t, 0
+        self._win_busy = {"heavy": 0.0, "light": 0.0}
+        self._win_freq.roll()
+        return sig
+
+    def apply_topology(self, t: float, new: Topology) -> None:
+        """Install a resized topology (engine-local resize, or a
+        cluster-level policy resizing this shard)."""
+        self.topo = new
+        for p in new:
+            self._n_units[p.name] = p.n_units
+        self.m.resize_events.append((t, dict(self._n_units)))
+
+    def _maybe_resize(self, t: float):
+        sig = self.load_signals(t)
+        if sig is None:
+            return
+        new = self.policy.resize(self.topo, sig)
+        if new is not None:
+            self.apply_topology(t, new)
+
+    def _charge(self, pool: str, kind: str, ms: float):
+        self.m.charge(pool, kind, ms)
+        # resize signals accumulate device-ms, not pool-ms: the work
+        # mix must read the same whatever the current pool split is
+        self._win_busy[kind] += ms * self._n_units[pool]
+
+    def _step(self, pool: str, t: float) -> Optional[float]:
+        """Run one scheduling decision; return the pool-free time or
+        None when the pool found nothing to do."""
+        policy, active, waiting = self.policy, self._active, self._waiting
+        pobj = self.topo.pool(pool)
+        if waiting and policy.eligible(self.topo, pobj, WorkKind.HEAVY):
+            # heavy work waits for this pool: stolen light work leaves
+            # (the paper's IPI preemption of scalar tasks on AVX cores)
+            if active[pool] and policy.on_type_change(
+                    self.topo, pobj,
+                    WorkKind.LIGHT).yield_if_heavy_waiting:
+                evicted, active[pool] = active[pool], []
+                target = next((n for n in policy.placement(
+                    self.topo, WorkKind.LIGHT) if n != pool), None)
+                if target is not None:
+                    self._transfer(evicted, pool, target, t)
+                else:
+                    active[pool] = evicted
+            end = t
+            burst = max(1, policy.heavy_burst(self.topo, pobj))
+            for _ in range(burst):
+                if not waiting:
+                    break
+                end = self._prefill_chunk(pool, self._n_units[pool], end)
+            return end
+        if active[pool]:
+            if pool not in policy.placement(self.topo, WorkKind.LIGHT):
+                self.m.steals += 1      # heavy pool running decode batches
+            return self._decode_round(pool, self._n_units[pool], t)
+        return None
 
     # ----------------------------------------------------------- steps
 
-    def _prefill_chunk(self, pool: str, ndev: int, t: float, waiting,
-                       active, m: ServeMetrics, charge,
-                       transfer) -> float:
-        cfg, model = self.cfg, self.model
+    def _prefill_chunk(self, pool: str, ndev: int, t: float) -> float:
+        cfg, model, m = self.cfg, self.model, self.m
+        waiting, active = self._waiting, self._active
         r: Request = waiting[0][2]
         if self.oracle is not None:
             self.oracle.on_prefill(t, pool, r, waiting)
@@ -447,7 +510,7 @@ class Engine:
             dur = model.prefill_ms(chunk, ndev)
             end = d.heavy_section(t, dur)
         r.prefilled += chunk
-        charge(pool, "heavy", end - t)
+        self._charge(pool, "heavy", end - t)
         if r.prefilled >= r.prompt_len:
             heapq.heappop(waiting)
             r.ttft_ms = end - r.arrive_ms
@@ -477,14 +540,14 @@ class Engine:
                     hand_end = d.observe(end, model.handoff_ms)
                 else:
                     hand_end = d.light_section(end, model.handoff_ms)
-                charge(pool, "heavy", hand_end - end)
-                transfer([r], pool, target, hand_end)
+                self._charge(pool, "heavy", hand_end - end)
+                self._transfer([r], pool, target, hand_end)
                 end = hand_end
         return end
 
-    def _decode_round(self, pool: str, ndev: int, t: float, active,
-                      m: ServeMetrics, charge) -> float:
-        cfg, model = self.cfg, self.model
+    def _decode_round(self, pool: str, ndev: int, t: float) -> float:
+        cfg, model, m = self.cfg, self.model, self.m
+        active = self._active
         batch = active[pool][:cfg.decode_batch_max]
         d = self.domains[pool]
         if self.executor is not None:
@@ -499,7 +562,7 @@ class Engine:
             end = d.light_section(t, dur)
         if self.oracle is not None:
             self.oracle.on_decode(t, end, pool, batch)
-        charge(pool, "light", end - t)
+        self._charge(pool, "light", end - t)
         still = []
         for r in batch:
             r.generated += 1

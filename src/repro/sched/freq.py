@@ -337,6 +337,12 @@ class FrequencyDomain:
 
     # ------------------------------------------------------ accounting
 
+    def window_counters(self) -> Tuple[float, float, float, int]:
+        """(reduced, busy, energy, transitions) — the counters
+        :class:`ResidencyWindow` differentiates per window."""
+        return (self.reduced_time(), self.busy_time, self.energy,
+                self.transitions)
+
     def reduced_time(self) -> float:
         """Wall time executed below L0 (the measured license residency
         the adaptive policy sizes pools from). Throttle-window spans are
@@ -378,3 +384,50 @@ class FrequencyDomain:
             "avg_freq_ghz": self.avg_freq_ghz(),
             "energy_proxy": self.energy,
         }
+
+
+class ResidencyWindow:
+    """Windowed deltas over a set of :class:`FrequencyDomain` counters.
+
+    Every adaptive layer in the system sizes or routes on *measured*
+    license residency over its own observation window: the engine's
+    ``AdaptivePolicy`` resizes a pool split on the per-window reduced
+    time of its heavy pools, and the cluster router scores shard
+    placement on each shard's per-window residency and energy draw.
+    Both previously would have to snapshot/diff raw counters by hand;
+    this class owns that bookkeeping — snapshot at window start
+    (``roll``), delta on demand (``peek``/``peek_reduced``).
+
+    Domains are keyed by name; the window survives the set of domains
+    being replaced only by constructing a fresh window (per run), which
+    is what every consumer does.
+    """
+
+    def __init__(self, domains):
+        self.domains = domains        # Dict[str, FrequencyDomain]
+        self._base = {k: d.window_counters() for k, d in domains.items()}
+
+    def peek(self) -> dict:
+        """Per-domain deltas since the last ``roll`` (or construction):
+        ``{name: {"reduced": .., "busy": .., "energy": ..,
+        "transitions": ..}}`` — no reset."""
+        out = {}
+        for k, d in self.domains.items():
+            red, busy, en, tr = d.window_counters()
+            b_red, b_busy, b_en, b_tr = self._base[k]
+            out[k] = {"reduced": red - b_red, "busy": busy - b_busy,
+                      "energy": en - b_en, "transitions": tr - b_tr}
+        return out
+
+    def peek_reduced(self, names) -> float:
+        """Sum of reduced-time deltas over ``names`` since the last
+        roll — the engine's resize signal (heavy pools only)."""
+        total = 0.0
+        for k in names:
+            total += self.domains[k].reduced_time() - self._base[k][0]
+        return total
+
+    def roll(self) -> None:
+        """Close the window: future deltas measure from now."""
+        self._base = {k: d.window_counters()
+                      for k, d in self.domains.items()}

@@ -326,6 +326,185 @@ class AdaptivePolicy(Policy):
         return topo.resized(heavy.name, want)
 
 
+# ----------------------------------------------------- cluster policies
+
+
+@dataclass(frozen=True)
+class ShardView:
+    """Read-only per-shard signals a :class:`ClusterPolicy` scores.
+
+    Built by the cluster engine at every routing decision: backlog from
+    the shard engine's queues, license residency and energy draw from
+    the shard's per-window :class:`repro.sched.freq.ResidencyWindow`
+    deltas (the cluster-scale analogue of the per-core residency the
+    paper's adaptive mechanism measures), and an instantaneous
+    reduced-clock flag."""
+    name: str
+    n_units: int = 0
+    heavy_units: int = 0
+    queue_depth: int = 0              # waiting + active + in-flight
+    admit_limit: int = 0              # router holds above this depth
+    license_residency: float = 0.0    # last window, 0..1
+    energy_rate: float = 0.0          # energy proxy per ms, last window
+    reduced_now: bool = False         # any pool currently below L0
+
+
+class ClusterPolicy:
+    """Cluster-level decisions: *which shard* runs a request and *when*
+    it is admitted, plus cross-shard resizing — the front-end analogue
+    of :class:`Policy` one layer up. The paper's signal discipline is
+    preserved: decisions are fed by MEASURED per-window frequency-domain
+    deltas, never by static labels.
+
+    ``shard_policy`` names the registered per-shard engine policy this
+    cluster policy expects underneath it (the scheduling behaviour
+    inside each shard)."""
+
+    name = "cluster-base"
+    shard_policy = "specialized"
+
+    def admits(self, view: ShardView) -> bool:
+        """Admission control: may the router dispatch to this shard
+        now? Base rule: bounded per-shard backlog."""
+        return view.queue_depth < view.admit_limit
+
+    def place(self, views: Tuple[ShardView, ...], request
+              ) -> Optional[str]:
+        """Choose a shard for ``request`` among those that admit it, or
+        None to hold it at the router (strict EDF head-of-line: later
+        deadlines must not overtake). Default: least backlog,
+        name-ordered tie-break — deterministic."""
+        open_ = [v for v in views if self.admits(v)]
+        if not open_:
+            return None
+        return min(open_, key=lambda v: (self.score(v, request),
+                                         v.name)).name
+
+    def score(self, view: ShardView, request) -> float:
+        """Placement score (lower = better). Base: relative backlog."""
+        return view.queue_depth / max(view.admit_limit, 1)
+
+    def reshard(self, topologies: Dict[str, Topology],
+                signals: Dict[str, LoadSignals]
+                ) -> Dict[str, Topology]:
+        """Cross-shard resize decisions, called once per cluster
+        window with each shard's measured :class:`LoadSignals` (license
+        residency included). Returns the shards to resize (empty dict =
+        keep everything)."""
+        return {}
+
+
+class ClusterRoundRobinPolicy(ClusterPolicy):
+    """Frequency-blind baseline: cycle through shards, skipping only
+    shards that refuse admission. What a fleet balancer does when
+    per-node frequency variation is invisible to it (Schuchart et
+    al.'s problem statement)."""
+
+    name = "cluster-rr"
+
+    def __init__(self):
+        self._next = 0
+
+    def place(self, views, request):
+        open_ = [v for v in views if self.admits(v)]
+        if not open_:
+            return None
+        pick = views[self._next % len(views)]
+        self._next += 1
+        if self.admits(pick):
+            return pick.name
+        return min(open_, key=lambda v: v.name).name
+
+
+class ClusterFreqAwarePolicy(ClusterPolicy):
+    """Frequency-aware placement: score shards on backlog + measured
+    license residency + energy draw. The residency penalty scales with
+    the request's *heaviness* (prefill-dominated requests are the AVX
+    analogue), so a shard stuck below L0 sheds heavy work first —
+    exactly as the paper migrates AVX threads off scalar cores — and
+    recovers once its hysteresis expires."""
+
+    name = "cluster-freq"
+
+    def __init__(self, w_freq: float = 1.5, w_energy: float = 0.1,
+                 decode_token_cost: float = 8.0):
+        self.w_freq = w_freq
+        self.w_energy = w_energy
+        # prompt tokens per decode token, cost-wise: used to estimate
+        # how prefill-heavy a request is without consulting a PoolModel
+        self.decode_token_cost = decode_token_cost
+
+    def heaviness(self, request) -> float:
+        """0..1 share of this request's cost that is heavy (prefill)."""
+        heavy = float(request.prompt_len)
+        light = self.decode_token_cost * float(request.max_new)
+        return heavy / max(heavy + light, 1.0)
+
+    def score(self, view: ShardView, request) -> float:
+        depth = view.queue_depth / max(view.admit_limit, 1)
+        h = self.heaviness(request)
+        freq_pen = view.license_residency * (0.5 + h)
+        if view.reduced_now:
+            freq_pen += 0.25 * h      # currently below L0: shed heavy
+        return depth + self.w_freq * freq_pen \
+            + self.w_energy * view.energy_rate
+
+
+class ClusterAdaptivePolicy(ClusterFreqAwarePolicy):
+    """`AdaptivePolicy` promoted to cluster level: frequency-aware
+    routing PLUS cross-shard resizing. Each shard's prefill/decode
+    split is sized by its own §4.3 estimator (EMA + debounce, exactly
+    the single-node :class:`AdaptivePolicy`), but driven centrally from
+    the per-window :class:`LoadSignals` the cluster collects — shard
+    engines themselves never resize in cluster mode."""
+
+    name = "cluster-adaptive"
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._sizers: Dict[str, AdaptivePolicy] = {}
+
+    def reshard(self, topologies, signals):
+        out = {}
+        for name in sorted(topologies):
+            sig = signals.get(name)
+            if sig is None:
+                continue
+            sizer = self._sizers.get(name)
+            if sizer is None:
+                sizer = self._sizers[name] = AdaptivePolicy()
+            new = sizer.resize(topologies[name], sig)
+            if new is not None:
+                out[name] = new
+        return out
+
+
+# name -> zero-arg factory, mirroring the per-shard POLICIES registry.
+CLUSTER_POLICIES: Dict[str, type] = {}
+
+
+def register_cluster_policy(name: str, factory) -> None:
+    CLUSTER_POLICIES[name] = factory
+
+
+def make_cluster_policy(name: str) -> ClusterPolicy:
+    try:
+        return CLUSTER_POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown cluster policy {name!r}; "
+                       f"registered: {sorted(CLUSTER_POLICIES)}") from None
+
+
+def registered_cluster_policies() -> Tuple[str, ...]:
+    return tuple(sorted(CLUSTER_POLICIES))
+
+
+register_cluster_policy("cluster-rr", ClusterRoundRobinPolicy)
+register_cluster_policy("cluster-queue", ClusterPolicy)
+register_cluster_policy("cluster-freq", ClusterFreqAwarePolicy)
+register_cluster_policy("cluster-adaptive", ClusterAdaptivePolicy)
+
+
 # ------------------------------------------------------ policy registry
 
 # name -> zero-arg factory. Factories (not instances) because policies

@@ -44,16 +44,29 @@ Invariants checked by the oracle (the engine's contract):
   freq-residency       per-pool frequency residency integrals sum to
                        the pool's charged busy time (no unaccounted
                        wall time at any level).
+
+Cluster replays (``--cluster N`` / :func:`replay_cluster`) run the same
+audit per shard via a :class:`ClusterOracle` (one ``EngineOracle`` per
+shard engine) and add the front-end router's contract
+(:class:`RouterOracle`): strict-EDF dispatch order, admission
+monotonicity (the router holds the head only when every shard is
+saturated), no duplicate dispatch, no lost requests.
 """
 from __future__ import annotations
 
 import argparse
+import atexit
 import json
+import os
+import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.sched.cluster import (ClusterConfig, ClusterEngine,
+                                 ClusterTopology)
 from repro.sched.engine import Engine, PoolModel, Request, ServeConfig
-from repro.sched.policy import make_policy, registered_policies
+from repro.sched.policy import (make_cluster_policy, make_policy,
+                                registered_policies)
 from repro.sched.topology import Topology, WorkKind
 from repro.sched.workload import SCENARIOS, Trace, scenario_trace
 
@@ -226,6 +239,131 @@ class EngineOracle:
                            f"token")
 
 
+# -------------------------------------------------------- cluster oracle
+
+
+class RouterOracle:
+    """Checks the front-end router's contract during a cluster replay.
+    Violations collect like the engine oracle's — report everything.
+
+      router-edf     only the earliest-deadline queued request may
+                     dispatch (strict head-of-line);
+      router-admit   a dispatch lands only on a shard whose backlog is
+                     below its admission limit, and the router never
+                     holds while some shard still admits — admission is
+                     monotone: a hold happens iff the fleet is
+                     saturated;
+      router-dup     no request is dispatched twice;
+      router-loss    every router arrival is either dispatched or still
+                     queued at end of run (nothing dropped, nothing
+                     invented);
+      deadline       the router's EDF key is the trace arrival plus the
+                     request's SLO window (router queueing spends SLO
+                     budget; it never resets it).
+    """
+
+    def __init__(self, default_window_ms: float = 50.0):
+        self.default_window_ms = default_window_ms
+        self.violations: List[Dict] = []
+        self.n_violations = 0
+        self._dispatched: Dict[int, str] = {}
+        self._arrived = 0
+
+    def _flag(self, check: str, t: float, detail: str):
+        self.n_violations += 1
+        if len(self.violations) < MAX_RECORDED_VIOLATIONS:
+            self.violations.append(
+                {"check": check, "t_ms": round(t, 3), "detail": detail})
+
+    # ----------------------------------------------------------- hooks
+
+    def on_router_arrive(self, t: float, r: Request, deadline: float):
+        self._arrived += 1
+        window = self.default_window_ms if r.deadline_window_ms is None \
+            else r.deadline_window_ms
+        if abs(deadline - (r.arrive_ms + window)) > 1e-9:
+            self._flag("deadline", t,
+                       f"rid={r.rid} router deadline {deadline} != "
+                       f"arrive+window {r.arrive_ms + window}")
+
+    def on_dispatch(self, t: float, head: Request, views, target,
+                    queue) -> None:
+        """``queue`` is the router's EDF heap [(deadline, rid, req)];
+        ``target`` is the chosen shard name or None (hold)."""
+        if queue:
+            dmin = min(e[0] for e in queue)
+            if queue[0][0] > dmin + 1e-9 or head is not queue[0][2]:
+                self._flag("router-edf", t,
+                           f"rid={head.rid} dispatched ahead of an "
+                           f"earlier-deadline queued request")
+        vmap = {v.name: v for v in views}
+        if target is None:
+            admitting = [v.name for v in views
+                         if v.queue_depth < v.admit_limit]
+            if admitting:
+                self._flag("router-admit", t,
+                           f"router holds rid={head.rid} while shards "
+                           f"{admitting} still admit")
+            return
+        v = vmap.get(target)
+        if v is None:
+            self._flag("router-admit", t,
+                       f"rid={head.rid} dispatched to unknown shard "
+                       f"{target!r}")
+        elif v.queue_depth >= v.admit_limit:
+            self._flag("router-admit", t,
+                       f"rid={head.rid} dispatched to saturated shard "
+                       f"{target!r} ({v.queue_depth} >= {v.admit_limit})")
+        if head.rid in self._dispatched:
+            self._flag("router-dup", t,
+                       f"rid={head.rid} dispatched twice "
+                       f"({self._dispatched[head.rid]!r} then {target!r})")
+        self._dispatched[head.rid] = target
+
+    def on_end(self, m, router) -> None:
+        queued = len(router)
+        if len(self._dispatched) + queued != self._arrived:
+            self._flag("router-loss", m.total_ms,
+                       f"{self._arrived} arrivals != "
+                       f"{len(self._dispatched)} dispatched + "
+                       f"{queued} still queued")
+
+
+class ClusterOracle:
+    """One :class:`EngineOracle` per shard plus a :class:`RouterOracle`,
+    aggregated: the full multi-node audit — per-shard EDF order, work
+    conservation, the three frequency invariants, and the router's
+    admission contract."""
+
+    def __init__(self, default_window_ms: float = 50.0):
+        self.router = RouterOracle(default_window_ms)
+        self.shards: Dict[str, EngineOracle] = {}
+
+    def shard(self, name: str) -> EngineOracle:
+        orc = self.shards.get(name)
+        if orc is None:
+            orc = self.shards[name] = EngineOracle()
+        return orc
+
+    def on_end(self, m, router) -> None:
+        # shard oracles close in Engine.finish(); only the router's
+        # end-of-run conservation check runs here
+        self.router.on_end(m, router)
+
+    @property
+    def n_violations(self) -> int:
+        return self.router.n_violations \
+            + sum(o.n_violations for o in self.shards.values())
+
+    @property
+    def violations(self) -> List[Dict]:
+        out = [{**v, "shard": "router"} for v in self.router.violations]
+        for name in sorted(self.shards):
+            out.extend({**v, "shard": name}
+                       for v in self.shards[name].violations)
+        return out[:MAX_RECORDED_VIOLATIONS]
+
+
 # ------------------------------------------------------ headline metrics
 
 
@@ -294,54 +432,183 @@ def replay_engine(trace: Trace, policy_name: str, *, n_devices: int = 16,
     }
 
 
+def replay_cluster(trace: Trace, cluster_policy: str = "cluster-adaptive",
+                   *, n_shards: int = 4, devices_per_shard: int = 16,
+                   prefill_devices: int = 4,
+                   model: Optional[PoolModel] = None,
+                   cfg: Optional[ClusterConfig] = None,
+                   cluster: Optional[ClusterTopology] = None,
+                   horizon_ms: Optional[float] = None,
+                   drain_ms: float = 20_000.0) -> Dict:
+    """Replay one trace through an N-shard cluster under one registered
+    cluster policy, with the full multi-node oracle attached (per-shard
+    engine invariants + router contract). The default layout is
+    ``ClusterTopology.homogeneous`` with each shard's engine policy
+    taken from the cluster policy's ``shard_policy`` attribute; pass an
+    explicit ``cluster`` to override."""
+    if cluster is None:
+        shard_policy = make_cluster_policy(cluster_policy).shard_policy
+        cluster = ClusterTopology.homogeneous(
+            n_shards, devices_per_shard, prefill_devices,
+            policy=shard_policy)
+    cfg = cfg or ClusterConfig()
+    oracle = ClusterOracle(cfg.serve.deadline_window_ms)
+    eng = ClusterEngine(cluster, cluster_policy, model or REPLAY_MODEL,
+                        cfg)
+    m = eng.run(trace.to_engine_requests(),
+                trace.duration_ms + drain_ms if horizon_ms is None
+                else horizon_ms,
+                oracle=oracle)
+    s = m.summary()
+    s["itl_spread_ms"] = s["itl_p99_ms"] - s["itl_p50_ms"]
+    return {
+        "mechanism": "cluster",
+        "policy": cluster_policy,
+        "cluster": cluster.to_dict(),
+        "metrics": s,
+        "shards": m.shard_summaries(),
+        "n_violations": oracle.n_violations,
+        "violations": oracle.violations,
+    }
+
+
 # --------------------------------------------------------------- matrix
 
 # Module-level worker functions: a process pool can only dispatch
-# importable callables. Each leg receives the frozen trace (pickled
-# once per leg) plus its coordinates and returns (scenario, slot, key,
-# result) so the parent can assemble the matrix deterministically
-# regardless of completion order.
+# importable callables. Legs reference their trace by (scenario,
+# duration, seed) coordinates against the module-level trace cache:
+# the parent populates the cache BEFORE the worker pool exists, so
+# fork-started workers inherit every frozen trace with zero pickling
+# per leg, and a worker that does not inherit (spawn start, or a pool
+# outliving a cache update) regenerates the identical bytes from the
+# deterministic generator. Each leg returns (scenario, slot, key,
+# result, wall_s) so the parent reassembles the matrix
+# deterministically regardless of completion order.
+
+_TRACE_CACHE: Dict[Tuple[str, float, int], Trace] = {}
 
 
-def _run_leg(leg) -> Tuple[str, str, str, Dict]:
+def _leg_trace(name: str, duration_ms: float, seed: int) -> Trace:
+    key = (name, float(duration_ms), int(seed))
+    tr = _TRACE_CACHE.get(key)
+    if tr is None:
+        tr = _TRACE_CACHE[key] = scenario_trace(
+            name, duration_ms=duration_ms, seed=seed)
+    return tr
+
+
+def _run_leg(leg) -> Tuple[str, str, str, Dict, float]:
+    t0 = time.perf_counter()
     if leg[0] == "engine":
-        _, name, pol, trace, n_devices, prefill_devices = leg
-        return (name, "engine", pol,
-                replay_engine(trace, pol, n_devices=n_devices,
-                              prefill_devices=prefill_devices))
-    from repro.core.experiments import run_trace_sim
-    _, name, spec, trace = leg
-    return (name, "simulator", "specialized" if spec else "shared",
-            run_trace_sim(trace, spec))
+        _, name, pol, n_devices, prefill_devices, dur, seed = leg
+        res = (name, "engine", pol,
+               replay_engine(_leg_trace(name, dur, seed), pol,
+                             n_devices=n_devices,
+                             prefill_devices=prefill_devices))
+    elif leg[0] == "cluster":
+        _, name, cpol, n_shards, dps, pfd, dur, seed = leg
+        res = (name, "cluster", cpol,
+               replay_cluster(_leg_trace(name, dur, seed), cpol,
+                              n_shards=n_shards, devices_per_shard=dps,
+                              prefill_devices=pfd))
+    else:
+        from repro.core.experiments import run_trace_sim
+        _, name, spec, dur, seed = leg
+        res = (name, "simulator", "specialized" if spec else "shared",
+               run_trace_sim(_leg_trace(name, dur, seed), spec))
+    return res + (time.perf_counter() - t0,)
+
+
+# Persistent worker pool: process startup (fork + interpreter state) is
+# the dominant cost of a parallel sweep, so the pool survives across
+# scenario_matrix calls and is only rebuilt when the worker count
+# changes. Shut down at interpreter exit.
+_POOL = None
+_POOL_SIZE = 0
+
+
+def _shutdown_pool():
+    global _POOL, _POOL_SIZE
+    if _POOL is not None:
+        _POOL.shutdown()
+        _POOL, _POOL_SIZE = None, 0
+
+
+atexit.register(_shutdown_pool)
+
+
+def _worker_pool(workers: int):
+    global _POOL, _POOL_SIZE
+    if _POOL is not None and _POOL_SIZE != workers:
+        _shutdown_pool()
+    if _POOL is None:
+        from concurrent.futures import ProcessPoolExecutor
+        _POOL = ProcessPoolExecutor(max_workers=workers)
+        _POOL_SIZE = workers
+    return _POOL
+
+
+def default_workers() -> int:
+    """CPU-aware worker count for ``--parallel`` without an argument."""
+    n = os.cpu_count() or 1
+    try:                               # respect container CPU limits
+        n = min(n, len(os.sched_getaffinity(0)))
+    except (AttributeError, OSError):
+        pass
+    return max(1, n)
 
 
 def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
                     duration_ms: float = 30_000.0, seed: int = 0,
                     n_devices: int = 16, prefill_devices: int = 4,
                     policies: Optional[Sequence[str]] = None,
-                    simulator: bool = True, parallel: int = 0) -> Dict:
+                    simulator: bool = True, parallel: int = 0,
+                    cluster: int = 0,
+                    cluster_policies: Optional[Sequence[str]] = None,
+                    timing: bool = False) -> Dict:
     """The differential matrix: every scenario x every registered
     policy through the engine (+ shared/specialized through the OS
-    simulator), one identical trace per scenario.
+    simulator, + N-shard cluster legs when ``cluster > 0``), one
+    identical trace per scenario.
 
     ``parallel=N`` fans the independent scenario x policy x mechanism
-    legs across a process pool of N workers, each replaying the shared
-    frozen trace (generated once in the parent, shipped by pickle —
-    workers never regenerate it, so every leg sees byte-identical
-    requests). Legs are pure functions of their inputs and results are
-    reassembled in registry order, so the matrix is identical to the
-    serial one. ``parallel<=1`` keeps the serial path."""
+    legs across a persistent process pool of N workers (``-1`` =
+    CPU-aware default) over the shared frozen traces — generated once
+    in the parent before any worker exists, inherited at fork, and
+    regenerated bit-identically by any worker that missed the fork.
+    Legs are pure functions of their inputs, dispatched in chunks, and
+    reassembled in registry order: the matrix is identical to the
+    serial one. ``parallel<=1`` keeps the serial path.
+
+    ``cluster=N`` adds an N-shard cluster leg per scenario and cluster
+    policy (default cluster-rr + cluster-adaptive), each shard sized
+    like the single-node reference cell (``n_devices`` devices) — the
+    scale-out comparison: N nodes behind the frequency-aware router vs
+    one node, same trace — with per-scenario ``cluster_derived``
+    headline reductions vs the shared engine baseline.
+
+    ``timing=True`` records per-leg wall seconds under ``_timing``
+    (kept out of the default matrix so determinism comparisons stay
+    exact)."""
     names = list(scenarios) if scenarios is not None else sorted(SCENARIOS)
     pols = list(policies) if policies is not None \
         else list(registered_policies())
+    cpols = list(cluster_policies) if cluster_policies is not None \
+        else ["cluster-rr", "cluster-adaptive"]
+    if parallel and parallel < 0:
+        parallel = default_workers()
     out: Dict[str, Dict] = {
         "_config": {"duration_ms": duration_ms, "seed": seed,
                     "n_devices": n_devices,
                     "prefill_devices": prefill_devices,
                     "policies": pols, "scenarios": names},
     }
-    traces = {name: scenario_trace(name, duration_ms=duration_ms,
-                                   seed=seed) for name in names}
+    dps, pfd = n_devices, prefill_devices
+    if cluster:
+        out["_config"]["cluster"] = {
+            "n_shards": cluster, "devices_per_shard": dps,
+            "prefill_devices": pfd, "policies": cpols}
+    traces = {name: _leg_trace(name, duration_ms, seed) for name in names}
     for name in names:
         out[name] = {
             "trace": {"scenario": name, "seed": seed,
@@ -351,38 +618,68 @@ def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
         }
         if simulator:
             out[name]["simulator"] = {}
-    legs = [("engine", name, pol, traces[name], n_devices,
-             prefill_devices) for name in names for pol in pols]
+        if cluster:
+            out[name]["cluster"] = {}
+    legs = [("engine", name, pol, n_devices, prefill_devices,
+             duration_ms, seed) for name in names for pol in pols]
+    if cluster:
+        legs += [("cluster", name, cpol, cluster, dps, pfd,
+                  duration_ms, seed) for name in names for cpol in cpols]
     if simulator:
-        legs += [("sim", name, spec, traces[name])
+        legs += [("sim", name, spec, duration_ms, seed)
                  for name in names for spec in (False, True)]
+    t_start = time.perf_counter()
     if parallel and parallel > 1:
-        from concurrent.futures import ProcessPoolExecutor
-        # one combined map: simulator legs fill workers as engine legs
-        # drain instead of waiting on a batch barrier
-        with ProcessPoolExecutor(max_workers=parallel) as pool:
-            results = list(pool.map(_run_leg, legs))
+        # one combined chunked map over the persistent pool: simulator
+        # legs fill workers as engine legs drain, no batch barrier
+        pool = _worker_pool(parallel)
+        chunk = max(1, len(legs) // (parallel * 4))
+        results = list(pool.map(_run_leg, legs, chunksize=chunk))
     else:
         results = [_run_leg(leg) for leg in legs]
-    for name, slot, key, res in results:
+    walls: Dict[str, float] = {}
+    for name, slot, key, res, wall in results:
         out[name][slot][key] = res
+        walls[f"{name}/{slot}/{key}"] = round(wall, 4)
+    if timing:
+        out["_timing"] = {
+            "legs": walls,
+            "wall_s": round(time.perf_counter() - t_start, 4),
+            "workers": parallel if parallel and parallel > 1 else 1}
     for name in names:
         cell = out[name]
         if "shared" in cell["engine"] and "specialized" in cell["engine"]:
             cell["derived"] = headline_metrics(
                 cell["engine"]["shared"]["metrics"],
                 cell["engine"]["specialized"]["metrics"])
+        if cluster and "shared" in cell["engine"]:
+            # cluster-vs-single-node headline: the "specialized" slots
+            # of headline_metrics carry the cluster run
+            cell["cluster_derived"] = {
+                cpol: headline_metrics(
+                    cell["engine"]["shared"]["metrics"], run["metrics"])
+                for cpol, run in cell["cluster"].items()}
     return out
 
 
 def total_violations(matrix: Dict) -> int:
     return sum(run.get("n_violations", 0)
                for name, cell in matrix.items() if not name.startswith("_")
-               for run in cell.get("engine", {}).values())
+               for slot in ("engine", "cluster")
+               for run in cell.get(slot, {}).values())
 
 
 def matrix_rows(matrix: Dict) -> List[str]:
-    """Human-readable summary lines, one per scenario x policy."""
+    """Human-readable summary lines, one per scenario x policy (and per
+    cluster policy when cluster legs ran). When the matrix carries
+    ``_timing``, each row ends with its leg's wall seconds — sweep hot
+    spots readable straight off the report."""
+    walls = matrix.get("_timing", {}).get("legs", {})
+
+    def wall(name, slot, key) -> str:
+        w = walls.get(f"{name}/{slot}/{key}")
+        return "" if w is None else f" wall={w:6.2f}s"
+
     rows = []
     for name, cell in matrix.items():
         if name.startswith("_"):
@@ -390,18 +687,37 @@ def matrix_rows(matrix: Dict) -> List[str]:
         for pol, run in cell.get("engine", {}).items():
             s = run["metrics"]
             rows.append(
-                f"{name:<14} {pol:<12} itl_p50={s['itl_p50_ms']:7.1f}ms "
+                f"{name:<14} {pol:<16} itl_p50={s['itl_p50_ms']:7.1f}ms "
                 f"itl_p99={s['itl_p99_ms']:8.1f}ms "
                 f"spread={s['itl_spread_ms']:8.1f}ms "
                 f"done={s['completed']:4d} "
                 f"f={s['avg_freq_ghz']:.2f}GHz "
                 f"thr={s['throttled_ms']:5.1f}ms "
                 f"E={s['energy_proxy']:8.0f} "
-                f"violations={run['n_violations']}")
+                f"violations={run['n_violations']}"
+                f"{wall(name, 'engine', pol)}")
+        for cpol, run in cell.get("cluster", {}).items():
+            s = run["metrics"]
+            rows.append(
+                f"{name:<14} {cpol:<16} itl_p50={s['itl_p50_ms']:7.1f}ms "
+                f"itl_p99={s['itl_p99_ms']:8.1f}ms "
+                f"spread={s['itl_spread_ms']:8.1f}ms "
+                f"done={s['completed']:4d} "
+                f"f={s['avg_freq_ghz']:.2f}GHz "
+                f"holds={s['router_holds']:4.0f} "
+                f"E={s['energy_proxy']:8.0f} "
+                f"violations={run['n_violations']}"
+                f"{wall(name, 'cluster', cpol)}")
         d = cell.get("derived")
         if d:
             rows.append(
-                f"{name:<14} {'-> spec/shared':<12} "
+                f"{name:<14} {'-> spec/shared':<16} "
+                f"variability_reduction="
+                f"{100 * d['itl_variability_reduction']:.0f}% "
+                f"p99_reduction={100 * d['itl_p99_reduction']:.0f}%")
+        for cpol, d in cell.get("cluster_derived", {}).items():
+            rows.append(
+                f"{name:<14} {'-> ' + cpol + '/shared':<16} "
                 f"variability_reduction="
                 f"{100 * d['itl_variability_reduction']:.0f}% "
                 f"p99_reduction={100 * d['itl_p99_reduction']:.0f}%")
@@ -419,11 +735,17 @@ def main(argv=None) -> int:
     ap.add_argument("--scenarios", nargs="*", default=None)
     ap.add_argument("--no-simulator", action="store_true",
                     help="skip the OS-simulator leg of the differential")
-    ap.add_argument("--parallel", type=int, default=0, metavar="N",
+    ap.add_argument("--parallel", type=int, nargs="?", const=-1,
+                    default=0, metavar="N",
                     help="fan scenario x policy x mechanism legs across "
-                         "a process pool of N workers over the shared "
-                         "frozen traces (0/1 = serial; results are "
+                         "a persistent process pool of N workers over "
+                         "the shared frozen traces (bare --parallel = "
+                         "CPU-aware count; 0/1 = serial; results are "
                          "identical either way)")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="add an N-shard cluster leg per scenario "
+                         "(cluster-rr + cluster-adaptive through the "
+                         "router, full multi-node oracle)")
     ap.add_argument("--out", type=Path, default=None,
                     help="write the full metrics matrix as JSON")
     ap.add_argument("--freq-trace", type=Path, default=None,
@@ -437,9 +759,14 @@ def main(argv=None) -> int:
         args.scenarios, duration_ms=duration, seed=args.seed,
         n_devices=8 if args.smoke else 16,
         prefill_devices=2 if args.smoke else 4,
-        simulator=not args.no_simulator, parallel=args.parallel)
+        simulator=not args.no_simulator, parallel=args.parallel,
+        cluster=args.cluster, timing=True)
     for row in matrix_rows(matrix):
         print(row)
+    t = matrix.get("_timing", {})
+    if t:
+        print(f"wall: {t['wall_s']:.2f}s across {t['workers']} "
+              f"worker(s)")
     if args.out:
         args.out.parent.mkdir(parents=True, exist_ok=True)
         args.out.write_text(json.dumps(matrix, indent=1, sort_keys=True))
@@ -459,14 +786,18 @@ def main(argv=None) -> int:
         for name, cell in matrix.items():
             if name.startswith("_"):
                 continue
-            for pol, run in cell.get("engine", {}).items():
-                for v in run["violations"][:5]:
-                    print(f"  {name}/{pol}: [{v['check']}] t={v['t_ms']} "
-                          f"{v['detail']}")
+            for slot in ("engine", "cluster"):
+                for pol, run in cell.get(slot, {}).items():
+                    for v in run["violations"][:5]:
+                        print(f"  {name}/{pol}: [{v['check']}] "
+                              f"t={v['t_ms']} {v['detail']}")
         return 1
-    print(f"replay: OK — {len(matrix) - 1} scenarios x "
-          f"{len(matrix['_config']['policies'])} policies, "
-          f"0 oracle violations")
+    n_scen = sum(1 for k in matrix if not k.startswith("_"))
+    print(f"replay: OK — {n_scen} scenarios x "
+          f"{len(matrix['_config']['policies'])} policies"
+          + (f" + {matrix['_config']['cluster']['n_shards']}-shard "
+             f"cluster legs" if "cluster" in matrix["_config"] else "")
+          + ", 0 oracle violations")
     return 0
 
 

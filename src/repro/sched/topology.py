@@ -17,6 +17,12 @@ Capabilities are descriptive ("this pool can run heavy work"); *when*
 and *whether* it does — placement, steal eligibility, preemption — is
 the :class:`repro.sched.policy.Policy`'s decision. This is the
 mechanism/policy split Gottschlag & Bellosa's follow-up argues for.
+
+One level up, :class:`repro.sched.cluster.ClusterTopology` composes
+these per-shard: shards partition a fleet's devices the way pools
+partition a node's, with the same frozen/serializable discipline
+(``to_dict``/``from_dict`` round-trip at both levels) and its own
+factories (``ClusterTopology.homogeneous`` / ``shared_pool``).
 """
 from __future__ import annotations
 
@@ -78,6 +84,13 @@ class Topology:
     @property
     def n_units(self) -> int:
         return sum(p.n_units for p in self.pools)
+
+    @property
+    def heavy_units(self) -> int:
+        """Units in heavy-capable pools — the denominator of a node's
+        license exposure (the cluster router reports it per shard)."""
+        return sum(p.n_units for p in self.pools
+                   if p.can(WorkKind.HEAVY))
 
     @property
     def names(self) -> Tuple[str, ...]:

@@ -356,12 +356,48 @@ register_scenario("multi_tenant", lambda: WorkloadSpec(
              Tenant("batch", weight=0.2, deadline_window_ms=500.0))))
 
 
+# Multi-node scenarios: aggregate rates sized for a sharded fleet (a
+# 4-node cluster of reference cells), not one node — the single-node
+# engine saturates on these, which is the point: they exercise the
+# router's admission control and the cluster policies' load spreading.
+# A separate registry keeps the tier-1 single-node matrix (which
+# pins set(cells) == set(SCENARIOS)) unchanged; `scenario_spec` /
+# `scenario_trace` resolve names from either registry.
+CLUSTER_SCENARIOS: Dict[str, Callable[[], WorkloadSpec]] = {}
+
+
+def register_cluster_scenario(name: str,
+                              factory: Callable[[], WorkloadSpec]):
+    CLUSTER_SCENARIOS[name] = factory
+    return factory
+
+
+register_cluster_scenario("fleet_steady", lambda: WorkloadSpec(
+    name="fleet_steady",
+    arrival=PoissonArrivals(rate_per_s=10.0)))
+
+register_cluster_scenario("fleet_surge", lambda: WorkloadSpec(
+    name="fleet_surge",
+    arrival=MMPPArrivals(rate_on_per_s=24.0, rate_off_per_s=2.0,
+                         mean_on_ms=1_500.0, mean_off_ms=2_500.0)))
+
+register_cluster_scenario("fleet_mixed", lambda: WorkloadSpec(
+    name="fleet_mixed",
+    arrival=DiurnalArrivals(base_rate_per_s=9.0, amplitude=0.6,
+                            period_ms=15_000.0),
+    prompt_lens=LognormalLen(median=1_600.0, sigma=0.6, lo=256,
+                             hi=8_192),
+    tenants=(Tenant("interactive", weight=0.5, deadline_window_ms=20.0),
+             Tenant("standard", weight=0.3, deadline_window_ms=50.0),
+             Tenant("batch", weight=0.2, deadline_window_ms=500.0))))
+
+
 def scenario_spec(name: str) -> WorkloadSpec:
-    try:
-        return SCENARIOS[name]()
-    except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"registered: {sorted(SCENARIOS)}") from None
+    factory = SCENARIOS.get(name) or CLUSTER_SCENARIOS.get(name)
+    if factory is None:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{sorted(SCENARIOS) + sorted(CLUSTER_SCENARIOS)}")
+    return factory()
 
 
 def scenario_trace(name: str, *, duration_ms: Optional[float] = None,
@@ -373,7 +409,7 @@ def load_trace(source: str, *, duration_ms: Optional[float] = None,
                seed: int = 0) -> Trace:
     """Resolve a ``--workload`` argument: a registered scenario name or
     a path to a JSON trace file."""
-    if source in SCENARIOS:
+    if source in SCENARIOS or source in CLUSTER_SCENARIOS:
         return scenario_trace(source, duration_ms=duration_ms, seed=seed)
     return Trace.load(source)
 

@@ -1,0 +1,186 @@
+"""Cluster tier: N engine shards behind the frequency-aware router.
+
+Gates:
+  * ``ClusterTopology`` serialization round-trips exactly;
+  * cluster replay is deterministic at every shard count — the same
+    seed x trace produces byte-identical metrics for 1, 2 and 4 shards
+    run twice;
+  * a >=4-shard cluster replays every registered scenario through the
+    extended multi-node oracle with ZERO violations;
+  * the ``RouterOracle`` actually catches injected violations (negative
+    tests: non-head dispatch -> router-edf, dispatch to a saturated or
+    unknown shard -> router-admit, hold-while-admitting -> router-admit,
+    double dispatch -> router-dup);
+  * cluster-level ``AdaptivePolicy`` (cluster-adaptive) beats the
+    shared single-node baseline on BOTH itl_p99 and tail spread in at
+    least 4 of the 5 registered scenarios.
+"""
+import json
+
+import pytest
+
+from repro.sched import SCENARIOS
+from repro.sched.cluster import ClusterConfig, ClusterTopology, ShardSpec
+from repro.sched.engine import Request
+from repro.sched.policy import (ShardView, make_cluster_policy,
+                                registered_cluster_policies)
+from repro.sched.replay import RouterOracle, replay_cluster, replay_engine
+from repro.sched.topology import Topology
+from repro.sched.workload import scenario_trace
+
+DURATION_MS = 30_000.0
+SEED = 0
+
+
+# ----------------------------------------------------------- topology
+
+
+def test_cluster_topology_roundtrip():
+    ct = ClusterTopology.homogeneous(3, 16, 4)
+    d = ct.to_dict()
+    back = ClusterTopology.from_dict(json.loads(json.dumps(d)))
+    assert back == ct
+    assert back.to_dict() == d
+
+
+def test_cluster_topology_roundtrip_heterogeneous():
+    ct = ClusterTopology((
+        ShardSpec("a", Topology.serving(16, 4), "specialized"),
+        ShardSpec("b", Topology.shared(8), "shared"),
+    ))
+    assert ClusterTopology.from_dict(ct.to_dict()) == ct
+
+
+def test_cluster_topology_validation():
+    with pytest.raises(ValueError):
+        ClusterTopology(())
+    with pytest.raises(ValueError):
+        ShardSpec("@router", Topology.shared(4))
+    with pytest.raises(ValueError):
+        ClusterTopology((ShardSpec("x", Topology.shared(4)),
+                         ShardSpec("x", Topology.shared(4))))
+
+
+def test_cluster_policies_registered():
+    names = registered_cluster_policies()
+    for want in ("cluster-rr", "cluster-queue", "cluster-freq",
+                 "cluster-adaptive"):
+        assert want in names
+    assert make_cluster_policy("cluster-adaptive").shard_policy
+
+
+# -------------------------------------------------------- determinism
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_shard_count_determinism(n_shards):
+    trace = scenario_trace("steady", duration_ms=DURATION_MS, seed=SEED)
+    runs = [replay_cluster(trace, n_shards=n_shards) for _ in range(2)]
+    a, b = (json.dumps(r, sort_keys=True) for r in runs)
+    assert a == b
+    assert runs[0]["n_violations"] == 0
+
+
+# ------------------------------------------------- multi-node oracle
+
+
+def test_four_shard_cluster_zero_violations_all_scenarios():
+    for name in sorted(SCENARIOS):
+        trace = scenario_trace(name, duration_ms=DURATION_MS, seed=SEED)
+        res = replay_cluster(trace, n_shards=4)
+        assert res["n_violations"] == 0, (name, res["violations"][:3])
+        assert res["metrics"]["completed"] > 0, name
+        assert len(res["shards"]) == 4
+
+
+def _views(*depths, limit=4):
+    return tuple(
+        ShardView(name=f"s{i}", n_units=16, heavy_units=4,
+                  queue_depth=d, admit_limit=limit,
+                  license_residency=0.0, energy_rate=0.0,
+                  reduced_now=False)
+        for i, d in enumerate(depths))
+
+
+def _req(rid, arrive_ms=0.0):
+    return Request(rid=rid, arrive_ms=arrive_ms, prompt_len=128,
+                   max_new=8)
+
+
+def test_router_oracle_catches_non_head_dispatch():
+    orc = RouterOracle()
+    r0, r1 = _req(0, 0.0), _req(1, 1.0)
+    queue = [(50.0, 0, r0), (51.0, 1, r1)]     # r0 is the EDF head
+    orc.on_dispatch(5.0, r1, _views(0, 0), "s0", queue)
+    assert orc.n_violations >= 1
+    assert any(v["check"] == "router-edf" for v in orc.violations)
+
+
+def test_router_oracle_catches_saturated_dispatch():
+    orc = RouterOracle()
+    r = _req(0)
+    orc.on_dispatch(5.0, r, _views(4, 0, limit=4), "s0",
+                    [(50.0, 0, r)])
+    assert any(v["check"] == "router-admit" for v in orc.violations)
+
+
+def test_router_oracle_catches_unknown_shard():
+    orc = RouterOracle()
+    r = _req(0)
+    orc.on_dispatch(5.0, r, _views(0, 0), "nope", [(50.0, 0, r)])
+    assert any(v["check"] == "router-admit" for v in orc.violations)
+
+
+def test_router_oracle_catches_hold_while_admitting():
+    orc = RouterOracle()
+    r = _req(0)
+    orc.on_dispatch(5.0, r, _views(4, 1, limit=4), None,
+                    [(50.0, 0, r)])
+    assert any(v["check"] == "router-admit" for v in orc.violations)
+    # a hold with every shard saturated is legal — no new violation
+    n = orc.n_violations
+    orc.on_dispatch(6.0, r, _views(4, 4, limit=4), None,
+                    [(50.0, 0, r)])
+    assert orc.n_violations == n
+
+
+def test_router_oracle_catches_double_dispatch():
+    orc = RouterOracle()
+    r = _req(0)
+    orc.on_dispatch(5.0, r, _views(0, 0), "s0", [(50.0, 0, r)])
+    orc.on_dispatch(6.0, r, _views(0, 0), "s1", [(50.0, 0, r)])
+    assert any(v["check"] == "router-dup" for v in orc.violations)
+
+
+def test_router_oracle_clean_dispatch_is_clean():
+    orc = RouterOracle()
+    r = _req(0)
+    orc.on_router_arrive(0.0, r, 50.0)
+    orc.on_dispatch(5.0, r, _views(0, 0), "s0", [(50.0, 0, r)])
+    assert orc.n_violations == 0
+
+
+# ------------------------------------------- cluster beats the baseline
+
+
+def test_cluster_adaptive_beats_shared_baseline():
+    """The acceptance gate: cluster-level AdaptivePolicy (4 full-size
+    nodes behind the frequency-aware router) beats the shared
+    single-node baseline on itl_p99 AND tail spread in >=4/5 registered
+    scenarios, replaying the identical trace."""
+    wins = 0
+    losses = []
+    for name in sorted(SCENARIOS):
+        trace = scenario_trace(name, duration_ms=DURATION_MS, seed=SEED)
+        shared = replay_engine(trace, "shared")["metrics"]
+        clus = replay_cluster(trace, "cluster-adaptive",
+                              n_shards=4)["metrics"]
+        p99_win = clus["itl_p99_ms"] < shared["itl_p99_ms"]
+        spread_win = clus["itl_spread_ms"] < (
+            shared["itl_p99_ms"] - shared["itl_p50_ms"])
+        if p99_win and spread_win:
+            wins += 1
+        else:
+            losses.append((name, clus["itl_p99_ms"],
+                           shared["itl_p99_ms"]))
+    assert wins >= 4, losses
