@@ -58,7 +58,12 @@ def _workloads(smoke: bool):
     duration_ms = 60_000.0 if smoke else 300_000.0
     web_us = 200_000.0 if smoke else 1_000_000.0
     out = []
-    for name in sorted(SCENARIOS):
+    # model-derived `zoo/*` scenarios are excluded: the benchmark
+    # trajectory (BENCH_simulator.json, gated by check_baseline on
+    # horizon_events_total) predates them, and re-deriving calibration
+    # must not read as a simulator perf regression. The hand-tuned
+    # matrix is the stable perf corpus; zoo coverage lives in tier-1.
+    for name in sorted(n for n in SCENARIOS if not n.startswith("zoo/")):
         trace = scenario_trace(name, duration_ms=duration_ms, seed=0)
         for spec in (False, True):
             label = f"trace/{name}/{'specialized' if spec else 'shared'}"

@@ -1,7 +1,9 @@
 """The paper's §3.3 identification workflow, end to end:
 
- 1. static analysis  — rank functions by heavy-op (MXU) density
-                       (the x86 tool ranked by 256/512-bit register use);
+ 1. static analysis  — segment each function into a region timeline
+                       (scalar / wide-vector / MXU license classes; the
+                       x86 tool ranked by 256/512-bit register use) and
+                       rank functions by heavy-op density;
  2. perf counters    — run the workload in the simulator and build the
                        CORE_POWER.THROTTLE flame graph;
  3. cross-check      — intersect the two to drop trailing-code false
@@ -18,11 +20,11 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro.analysis import (  # noqa: E402
+    FunctionProfile, rank_functions, report, segment, tag_heavy)
 from repro.core.muqss import SchedConfig  # noqa: E402
 from repro.core.perfcounters import collect, cross_check  # noqa: E402
 from repro.core.simulator import Simulator  # noqa: E402
-from repro.core.static_analysis import (  # noqa: E402
-    FunctionProfile, rank_functions, report)
 from repro.core.workloads import WebConfig, webserver_tasks  # noqa: E402
 from repro.sched import Topology, make_policy  # noqa: E402
 
@@ -44,13 +46,27 @@ def main(sim_us: float = 300_000.0):
     def ffn_block(x):              # MXU-dense (the TPU heavy class)
         return jax.nn.gelu(x @ w1) @ w2
 
+    # region timelines: program-order phases with license classes —
+    # sub-function granularity the old whole-function ranking lacked
+    timelines = [
+        segment(chacha20_avx512, jnp.zeros((64, d), jnp.int32),
+                name="chacha20_avx512"),
+        segment(brotli, jnp.zeros((64, d)), name="brotli"),
+        segment(ffn_block, jnp.zeros((64, d)), name="ffn_block"),
+    ]
+    print("== region timelines (program-order phase segmentation) ==")
+    for tl in timelines:
+        print(tl.report())
+        print()
+    print("analyzer heavy tags:", tag_heavy(timelines))
+
     ranked = rank_functions([
         ("chacha20_avx512", chacha20_avx512,
          (jnp.zeros((64, d), jnp.int32),)),
         ("brotli", brotli, (jnp.zeros((64, d)),)),
         ("ffn_block", ffn_block, (jnp.zeros((64, d)),)),
     ])
-    print("== static analysis (sorted by heavy-op ratio) ==")
+    print("\n== whole-function ranking (sorted by heavy-op ratio) ==")
     print(report(ranked))
 
     # ---- 2. perf-counter pass in the simulator ------------------------

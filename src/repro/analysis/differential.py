@@ -1,0 +1,85 @@
+"""Static-vs-HLO differential oracle.
+
+The static pass (:mod:`repro.analysis.costs`) makes claims from the
+un-optimized jaxpr; XLA then fuses, DCEs and rewrites. This module
+cross-checks the static flop claim against the while-aware HLO cost
+model (``repro.roofline.hlo_cost``) over the *compiled* module text —
+the two count flops independently (jaxpr equations vs post-optimization
+HLO instructions), so agreement within a tolerance is real evidence the
+static numbers can calibrate frequency configs.
+
+Divergence is reported, not hidden: elementwise flops are where the
+models legitimately differ (fusion dedups / rematerializes pointwise
+work, XLA decomposes transcendentals), so MXU-dominated entrypoints
+agree tightly while pointwise-only kernels carry a wider documented
+tolerance. Bytes are NOT compared — the HLO side only counts traffic at
+fusion boundaries, which is a different (and post-layout) quantity from
+the jaxpr's operand/result footprint.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+
+from repro.analysis.costs import CostConfig, jaxpr_cost
+from repro.roofline import hlo_cost
+
+# documented default: static and HLO flop totals must agree within 25%
+FLOPS_REL_TOL = 0.25
+
+
+@dataclass
+class DifferentialResult:
+    name: str
+    static_flops: float
+    hlo_flops: float
+    static_mxu_flops: float
+    tol: float
+
+    @property
+    def rel_err(self) -> float:
+        ref = max(self.static_flops, self.hlo_flops)
+        return abs(self.static_flops - self.hlo_flops) / ref if ref else 0.0
+
+    @property
+    def agrees(self) -> bool:
+        return self.rel_err <= self.tol
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "static_flops": self.static_flops,
+                "hlo_flops": self.hlo_flops,
+                "static_mxu_flops": self.static_mxu_flops,
+                "rel_err": self.rel_err, "tol": self.tol,
+                "agrees": self.agrees}
+
+    def describe(self) -> str:
+        verdict = "OK" if self.agrees else "DIVERGED"
+        return (f"{self.name:28s} static {self.static_flops:.3e} vs "
+                f"HLO {self.hlo_flops:.3e}  rel_err {self.rel_err:.3f} "
+                f"(tol {self.tol:.2f})  {verdict}")
+
+
+def differential(fn: Callable, *args, name: str = "",
+                 tol: float = FLOPS_REL_TOL,
+                 cfg: CostConfig = CostConfig(),
+                 compiled=None) -> Optional[DifferentialResult]:
+    """Compare the static flop claim for ``fn(*args)`` against the HLO
+    cost model over its compiled text. ``args`` must be concrete (or
+    ShapeDtypeStructs — AOT lowering accepts both). Pass ``compiled`` to
+    reuse an existing ``jax.stages.Compiled``. Returns None when the
+    backend refuses to compile (the static side alone is then the only
+    claim, and the caller must say so)."""
+    nm = name or getattr(fn, "__name__", "fn")
+    closed = jax.make_jaxpr(fn)(*args)
+    static = jaxpr_cost(closed.jaxpr, cfg)
+    if compiled is None:
+        try:
+            compiled = jax.jit(fn).lower(*args).compile()
+        except Exception:
+            return None
+    hlo = hlo_cost.analyze(compiled.as_text())
+    return DifferentialResult(name=nm, static_flops=static.flops,
+                              hlo_flops=hlo.flops,
+                              static_mxu_flops=static.mxu_flops, tol=tol)

@@ -1,128 +1,36 @@
-"""Static analysis: the paper's 'disassembler' adapted to JAX.
+"""Compat shim: the static analyzer moved to :mod:`repro.analysis`.
 
-The prototype disassembles x86 binaries and ranks functions by the ratio
-of 256/512-bit register accesses to total instructions (§3.3). Our
-binaries are jaxprs/HLO: the analogue of a 'wide vector instruction' is
-an MXU op (dot_general / conv), and the ranking key is the fraction of a
-function's FLOPs issued to the MXU plus its arithmetic intensity — dense
-MXU-heavy functions are the license-dropping candidates (prefill,
-expert FFNs), load-dominated ones (decode) are the scalar analogue.
+The PR-2 whole-function interface (``FunctionProfile`` /
+``analyze_jaxpr`` / ``rank_functions`` / ``report``) lives on in
+``repro.analysis.regions``, now derived from the region-timeline pass
+instead of a single fall-through cost walk. The old ``_eqn_cost``
+control-flow bugs are fixed in :mod:`repro.analysis.costs`:
 
-``rank_functions`` is the paper's sorted report; ``analyze_jaxpr`` the
-per-function measurement.
+  * ``while`` now costs ``cond_jaxpr`` (previously dropped) and charges
+    the body an assumed trip count (``CostConfig.assumed_while_trips``)
+    instead of exactly one iteration;
+  * ``cond`` branches are costed explicitly as an elementwise max
+    (previously fell through to the pointwise path, counting branch MXU
+    flops as ZERO).
+
+Import from ``repro.analysis`` in new code.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from repro.analysis.costs import (MXU_PRIMS, CostConfig, cost_tuple,
+                                  jaxpr_cost)
+from repro.analysis.regions import (FunctionProfile, analyze_jaxpr,
+                                    rank_functions, report)
 
-import jax
-import numpy as np
-
-MXU_PRIMS = {"dot_general", "conv_general_dilated"}
-# scan-like primitives whose body cost multiplies by trip count
-LOOP_PRIMS = {"scan", "while"}
+__all__ = ["MXU_PRIMS", "FunctionProfile", "analyze_jaxpr",
+           "rank_functions", "report"]
 
 
-@dataclass
-class FunctionProfile:
-    name: str
-    mxu_flops: float
-    total_flops: float
-    bytes_touched: float
-
-    @property
-    def heavy_ratio(self) -> float:
-        return self.mxu_flops / self.total_flops if self.total_flops else 0.0
-
-    @property
-    def arithmetic_intensity(self) -> float:
-        return self.total_flops / self.bytes_touched if self.bytes_touched \
-            else 0.0
+def _jaxpr_cost(jaxpr):
+    """Legacy triple — kept for any caller poking the old private API."""
+    return cost_tuple(jaxpr_cost(jaxpr, CostConfig()))
 
 
-def _aval_elems(aval) -> float:
-    n = 1.0
-    for d in getattr(aval, "shape", ()):
-        n *= d
-    return n
-
-
-def _aval_bytes(aval) -> float:
-    dt = getattr(aval, "dtype", None)
-    return _aval_elems(aval) * (np.dtype(dt).itemsize if dt is not None else 4)
-
-
-def _eqn_cost(eqn) -> Tuple[float, float, float]:
-    """(mxu_flops, total_flops, bytes) for one jaxpr equation."""
-    prim = eqn.primitive.name
-    if prim == "dot_general":
-        out = eqn.outvars[0].aval
-        dims = eqn.params["dimension_numbers"][0][0]  # lhs contracting
-        lhs = eqn.invars[0].aval
-        k = 1.0
-        for d in dims:
-            k *= lhs.shape[d]
-        fl = 2.0 * _aval_elems(out) * k
-        by = sum(_aval_bytes(v.aval) for v in eqn.invars) + _aval_bytes(out)
-        return fl, fl, by
-    if prim == "conv_general_dilated":
-        out = eqn.outvars[0].aval
-        rhs = eqn.invars[1].aval
-        k = _aval_elems(rhs) / max(rhs.shape[-1], 1)
-        fl = 2.0 * _aval_elems(out) * k
-        by = sum(_aval_bytes(v.aval) for v in eqn.invars) + _aval_bytes(out)
-        return fl, fl, by
-    if prim in ("scan", "while", "pjit", "custom_vjp_call", "custom_jvp_call",
-                "remat", "checkpoint", "closed_call", "shard_map"):
-        inner = None
-        for key in ("jaxpr", "call_jaxpr", "body_jaxpr"):
-            if key in eqn.params:
-                inner = eqn.params[key]
-                break
-        if inner is None:
-            return 0.0, 0.0, 0.0
-        jaxpr = inner.jaxpr if hasattr(inner, "jaxpr") else inner
-        mult = eqn.params.get("length", 1) if prim == "scan" else 1
-        m, t, b = _jaxpr_cost(jaxpr)
-        return m * mult, t * mult, b * mult
-    # elementwise / reductions: one flop per output element
-    fl = sum(_aval_elems(v.aval) for v in eqn.outvars
-             if hasattr(v, "aval"))
-    by = sum(_aval_bytes(v.aval) for v in eqn.invars
-             if hasattr(v, "aval")) \
-        + sum(_aval_bytes(v.aval) for v in eqn.outvars if hasattr(v, "aval"))
-    return 0.0, fl, by
-
-
-def _jaxpr_cost(jaxpr) -> Tuple[float, float, float]:
-    m = t = b = 0.0
-    for eqn in jaxpr.eqns:
-        dm, dt_, db = _eqn_cost(eqn)
-        m, t, b = m + dm, t + dt_, b + db
-    return m, t, b
-
-
-def analyze_jaxpr(fn: Callable, *args, name: str = "") -> FunctionProfile:
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    m, t, b = _jaxpr_cost(jaxpr.jaxpr)
-    return FunctionProfile(name or getattr(fn, "__name__", "fn"), m, t, b)
-
-
-def rank_functions(entries: Sequence[Tuple[str, Callable, tuple]]
-                   ) -> List[FunctionProfile]:
-    """The paper's report: functions sorted by heavy-op ratio (descending).
-    entries: (name, fn, example_args)."""
-    profs = [analyze_jaxpr(fn, *args, name=nm) for nm, fn, args in entries]
-    return sorted(profs, key=lambda p: (p.heavy_ratio,
-                                        p.arithmetic_intensity), reverse=True)
-
-
-def report(profs: Sequence[FunctionProfile]) -> str:
-    lines = [f"{'function':30s} {'heavy_ratio':>11s} {'GFLOP':>10s} "
-             f"{'AI(flop/B)':>10s}"]
-    for p in profs:
-        lines.append(f"{p.name:30s} {p.heavy_ratio:11.3f} "
-                     f"{p.total_flops/1e9:10.2f} "
-                     f"{p.arithmetic_intensity:10.1f}")
-    return "\n".join(lines)
+def _eqn_cost(eqn):
+    from repro.analysis.costs import eqn_cost
+    return cost_tuple(eqn_cost(eqn, CostConfig()))

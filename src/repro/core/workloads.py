@@ -155,17 +155,18 @@ TRACE_PREFILL_CYCLES_PER_TOK = 205.0   # ~150 sim-µs per 2k-tok prefill
 TRACE_DECODE_CYCLES_PER_TOK = 6_000.0  # ~2 sim-µs per generated token
 
 
-def _trace_request(prompt_len: int, max_new: int, isa: str
-                   ) -> Iterator[object]:
+def _trace_request(prompt_len: int, max_new: int, isa: str,
+                   prefill_cycles_per_tok: float,
+                   decode_cycles_per_tok: float) -> Iterator[object]:
     """One serving request as an OS-simulator task body: an annotated
     heavy (AVX-analogue) prefill section, then light decode segments."""
     icl = ICLASS_OF_ISA[isa]
     yield TypeChange(TaskType.AVX)
-    yield Segment(prompt_len * TRACE_PREFILL_CYCLES_PER_TOK, icl,
+    yield Segment(prompt_len * prefill_cycles_per_tok, icl,
                   dense=True, stack=("serve", "prefill"))
     yield TypeChange(TaskType.SCALAR)
     for _ in range(max_new):
-        yield Segment(TRACE_DECODE_CYCLES_PER_TOK, IClass.SCALAR,
+        yield Segment(decode_cycles_per_tok, IClass.SCALAR,
                       stack=("serve", "decode"))
     yield RequestDone()
 
@@ -174,8 +175,20 @@ def trace_tasks(trace, isa: str = "avx512"):
     """Convert a serving trace (``repro.sched.workload.Trace`` or any
     object with ``.requests`` carrying rid/arrive_ms/prompt_len/max_new/
     tenant) into ``[(Task, arrive_us)]`` for ``Simulator.add_task``.
-    Task names are ``tenant:rid`` so per-tenant latencies group."""
-    return [(Task(_trace_request(r.prompt_len, r.max_new, isa),
+    Task names are ``tenant:rid`` so per-tenant latencies group.
+
+    Per-token cycle costs default to the hand-tuned constants above; a
+    trace whose ``meta['sim_work']`` carries analyzer-derived values
+    (the ``zoo/*`` scenarios, stamped by ``repro.analysis.calibrate``)
+    replays that model's duty cycle instead."""
+    sim_work = {}
+    if getattr(trace, "meta", None):
+        sim_work = trace.meta.get("sim_work") or {}
+    pre = float(sim_work.get("prefill_cycles_per_tok",
+                             TRACE_PREFILL_CYCLES_PER_TOK))
+    dec = float(sim_work.get("decode_cycles_per_tok",
+                             TRACE_DECODE_CYCLES_PER_TOK))
+    return [(Task(_trace_request(r.prompt_len, r.max_new, isa, pre, dec),
                   ttype=TaskType.SCALAR, name=f"{r.tenant}:{r.rid}"),
              r.arrive_ms)          # 1 trace-ms == 1 sim-µs
             for r in trace.requests]

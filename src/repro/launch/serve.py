@@ -4,9 +4,13 @@ Runs actual jitted prefill/decode of a reduced-config model on CPU,
 driven by the event-driven engine (`repro.sched.engine`) — the same
 scheduler code the benchmarks exercise, with service times *measured*
 from the real jitted calls instead of modelled. The annotation workflow
-runs end-to-end: static analysis ranks the two step functions, tags the
-heavy (AVX-analogue) phase, and the ``SpecializedPolicy`` confines it
-to the prefill pool of a two-pool ``Topology``.
+runs end-to-end: the region analyzer (`repro.analysis`) segments the
+two step functions into phase timelines, the calibrated tag set from
+``analysis/derived.json`` (falling back to a fresh ``tag_heavy`` for
+uncalibrated archs) marks the heavy (AVX-analogue) phase, and the
+``SpecializedPolicy`` confines it to the prefill pool of a two-pool
+``Topology``. The engine's frequency domain likewise uses the
+calibrated per-arch license levels when available.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 16 --prompt 64 --max-new 16
@@ -18,14 +22,15 @@ layer — N shard engines behind the frequency-aware router
 running on its own ``DistContext`` mesh slice of the local devices.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import derived, segment, tag_heavy
 from repro.configs import get_arch
-from repro.core.static_analysis import rank_functions, report
 from repro.dist.context import DistContext, make_dist, no_dist
 from repro.models.api import build_model
 from repro.sched import (ClusterConfig, ClusterEngine, ClusterTopology,
@@ -95,33 +100,64 @@ class RealModelExecutor:
 
 
 def identify_heavy_phase(model, params, batch: int, prompt: int,
-                         max_seq: int):
-    """§3.3 identification workflow on the two step functions."""
+                         max_seq: int, arch: str = None):
+    """§3.3 identification workflow on the two step functions.
+
+    Segments both entrypoints into region timelines and returns
+    ``(timelines, tags)``. Tags come from the committed calibration
+    artifact (``analysis/derived.json``) when this arch was calibrated —
+    the same derivation the intermittency lint gates on, so serve can
+    never silently run an entrypoint the analyzer considers heavy
+    untagged — and from a fresh ``tag_heavy`` over the just-built
+    timelines otherwise."""
     toks = jnp.zeros((batch, prompt), jnp.int32)
     cache = model.init_cache(params, {"tokens": toks}, batch, max_seq)
 
-    def prefill_fn(p, t, c):
-        return model.prefill(p, {"tokens": t}, c)
+    timelines = [
+        segment(lambda p, t, c: model.prefill(p, {"tokens": t}, c),
+                params, toks, cache, name="prefill"),
+        segment(lambda p, c, t, l: model.decode_step(p, c, t, l),
+                params, cache, toks[:, :1],
+                jnp.full((batch,), prompt, jnp.int32), name="decode_step"),
+    ]
+    committed = derived.workloads().get(arch) if arch else None
+    if committed:
+        tags = [t for t in committed["tags"]
+                if t in {tl.name for tl in timelines}]
+        src = "derived.json"
+    else:
+        tags, src = tag_heavy(timelines), "fresh tag_heavy"
+    return timelines, tags, src
 
-    def decode_fn(p, c, t, l):
-        return model.decode_step(p, c, t, l)
 
-    ranked = rank_functions([
-        ("prefill_step", prefill_fn, (params, toks, cache)),
-        ("decode_step", decode_fn,
-         (params, cache, toks[:, :1], jnp.full((batch,), prompt))),
-    ])
-    return ranked
+def engine_freq_config(arch: str):
+    """The engine's ms-base frequency domain, with the license levels
+    the calibration derived for this arch (falls back to the hand-tuned
+    ``ENGINE_FREQ_MS`` levels for uncalibrated archs)."""
+    from repro.sched.freq import ENGINE_FREQ_MS
+    if arch in derived.workloads():
+        return dataclasses.replace(
+            ENGINE_FREQ_MS,
+            freqs_ghz=tuple(derived.freq_levels_ghz(arch)))
+    return ENGINE_FREQ_MS
+
+
+def _print_identification(timelines, tags, src) -> str:
+    print("[serve] region analysis (phase timelines):")
+    for tl in timelines:
+        print(tl.report())
+    heavy = tags[0] if tags else timelines[0].name
+    print(f"[serve] analyzer-derived heavy tags ({src}): {tags}")
+    return heavy
 
 
 def run_engine(args, cfg, model, params):
     """Real-model serving through the Policy/Topology engine."""
     P, N = args.prompt, args.max_new
     max_seq = P + N
-    ranked = identify_heavy_phase(model, params, args.batch, P, max_seq)
-    print("[serve] static analysis (heavy-op report):")
-    print(report(ranked))
-    heavy = ranked[0].name
+    timelines, tags, src = identify_heavy_phase(model, params, args.batch,
+                                                P, max_seq, args.arch)
+    heavy = _print_identification(timelines, tags, src)
     print(f"[serve] tagging {heavy!r} as the heavy (AVX-analogue) phase;"
           " SpecializedPolicy confines it to the prefill pool\n")
 
@@ -148,7 +184,8 @@ def run_engine(args, cfg, model, params):
                         max_new=N) for i in range(args.requests)]
     eng = Engine(topo, policy,
                  cfg=ServeConfig(prefill_chunk=P,
-                                 decode_batch_max=args.batch),
+                                 decode_batch_max=args.batch,
+                                 freq=engine_freq_config(args.arch)),
                  executor=ex)
     t0 = time.time()
     m = eng.run(reqs)               # no horizon: run to completion
@@ -203,10 +240,10 @@ def run_cluster(args, cfg, model, params):
     SLO-aware router."""
     P, N = args.prompt, args.max_new
     max_seq = P + N
-    ranked = identify_heavy_phase(model, params, args.batch, P, max_seq)
-    print("[serve] static analysis (heavy-op report):")
-    print(report(ranked))
-    print(f"[serve] tagging {ranked[0].name!r} as the heavy phase; "
+    timelines, tags, src = identify_heavy_phase(model, params, args.batch,
+                                                P, max_seq, args.arch)
+    heavy = _print_identification(timelines, tags, src)
+    print(f"[serve] tagging {heavy!r} as the heavy phase; "
           f"{args.shards}-shard cluster under {args.cluster_policy!r}\n")
 
     cluster = ClusterTopology.homogeneous(args.shards, 2, 1)
@@ -234,8 +271,9 @@ def run_cluster(args, cfg, model, params):
         interval_ms = 1000.0 / args.rate
         reqs = [Request(rid=i, arrive_ms=i * interval_ms, prompt_len=P,
                         max_new=N) for i in range(args.requests)]
-    ccfg = ClusterConfig(serve=ServeConfig(prefill_chunk=P,
-                                           decode_batch_max=args.batch))
+    ccfg = ClusterConfig(serve=ServeConfig(
+        prefill_chunk=P, decode_batch_max=args.batch,
+        freq=engine_freq_config(args.arch)))
     eng = ClusterEngine(cluster, args.cluster_policy, cfg=ccfg,
                         executors=executors)
     t0 = time.time()
@@ -262,10 +300,10 @@ def run_loop(args, cfg, model, params):
     comparison."""
     B, P, N = args.batch, args.prompt, args.max_new
     max_seq = P + N
-    ranked = identify_heavy_phase(model, params, B, P, max_seq)
-    print("[serve] static analysis (heavy-op report):")
-    print(report(ranked))
-    print(f"[serve] tagging {ranked[0].name!r} as the heavy phase\n")
+    timelines, tags, src = identify_heavy_phase(model, params, B, P,
+                                                max_seq, args.arch)
+    heavy = _print_identification(timelines, tags, src)
+    print(f"[serve] tagging {heavy!r} as the heavy phase\n")
 
     prefill_j = jax.jit(lambda p, t, c: model.prefill(p, {"tokens": t}, c))
     decode_j = jax.jit(lambda p, c, t, l: model.decode_step(p, c, t, l))

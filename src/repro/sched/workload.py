@@ -210,6 +210,11 @@ class WorkloadSpec:
     tenants: Tuple[Tenant, ...] = (Tenant(),)
     duration_ms: float = 30_000.0
     seed: int = 0
+    # per-token simulator replay costs derived by the static-analysis
+    # calibration (repro.analysis.calibrate); None = the hand-tuned
+    # defaults in core.workloads. Carried into Trace.meta so the OS
+    # simulator legs replay a model-shaped duty cycle.
+    sim_work: Optional[Dict] = None
 
     def generate(self, *, duration_ms: Optional[float] = None,
                  seed: Optional[int] = None) -> "Trace":
@@ -228,9 +233,11 @@ class WorkloadSpec:
                 max_new=max(1, self.output_lens.sample(rng)),
                 tenant=tenant.name,
                 deadline_window_ms=tenant.deadline_window_ms))
-        return Trace(meta={"scenario": self.name, "seed": sd,
-                           "duration_ms": dur, "spec": self.to_dict()},
-                     requests=reqs)
+        meta = {"scenario": self.name, "seed": sd,
+                "duration_ms": dur, "spec": self.to_dict()}
+        if self.sim_work:
+            meta["sim_work"] = dict(self.sim_work)
+        return Trace(meta=meta, requests=reqs)
 
     def to_dict(self) -> Dict:
         return {
@@ -241,6 +248,7 @@ class WorkloadSpec:
             "tenants": [asdict(t) for t in self.tenants],
             "duration_ms": self.duration_ms,
             "seed": self.seed,
+            "sim_work": dict(self.sim_work) if self.sim_work else None,
         }
 
     @staticmethod
@@ -253,6 +261,7 @@ class WorkloadSpec:
             tenants=tuple(Tenant(**t) for t in d["tenants"]),
             duration_ms=d["duration_ms"],
             seed=d["seed"],
+            sim_work=d.get("sim_work") or None,
         )
 
 
@@ -354,6 +363,34 @@ register_scenario("multi_tenant", lambda: WorkloadSpec(
     tenants=(Tenant("interactive", weight=0.5, deadline_window_ms=20.0),
              Tenant("standard", weight=0.3, deadline_window_ms=50.0),
              Tenant("batch", weight=0.2, deadline_window_ms=500.0))))
+
+
+# Model-derived scenarios: one `zoo/<arch>` entry per architecture in
+# configs/, stamped by the static-analysis calibration pass
+# (`python -m repro.analysis.calibrate --update` -> analysis/derived.json).
+# Prompt/output shapes follow the model family, the Poisson rate holds
+# the reference cell at the `steady` prefill-token operating point, and
+# `sim_work` carries analyzer-derived per-token replay costs so the OS
+# simulator legs see each model's duty cycle. The loader is pure JSON —
+# no jax in this import path (replay workers import this module).
+
+
+def _register_zoo_scenarios() -> None:
+    from repro.analysis import derived
+    for arch in derived.workload_ids():
+        params = derived.scenario_params(arch)
+
+        def factory(arch=arch, params=params) -> WorkloadSpec:
+            return WorkloadSpec(
+                name=f"zoo/{arch}",
+                arrival=PoissonArrivals(rate_per_s=params["rate_per_s"]),
+                prompt_lens=_untag(params["prompt"], _LENGTHS),
+                output_lens=_untag(params["output"], _LENGTHS),
+                sim_work=dict(params["sim_work"]))
+        register_scenario(f"zoo/{arch}", factory)
+
+
+_register_zoo_scenarios()
 
 
 # Multi-node scenarios: aggregate rates sized for a sharded fleet (a

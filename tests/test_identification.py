@@ -3,16 +3,18 @@ flame graph + cross-check, and the adaptive policy (§4.3)."""
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import segment, tag_heavy
 from repro.core.adaptive import AdaptiveConfig, AdaptivePolicy
 from repro.core.muqss import SchedConfig
 from repro.core.perfcounters import CounterReport, cross_check
 from repro.core.simulator import Simulator
+# the identification workflow moved to repro.analysis; these imports go
+# through the compat shim on purpose — old callers must keep working
 from repro.core.static_analysis import analyze_jaxpr, rank_functions, report
 from repro.core.workloads import WebConfig, webserver_tasks
 
 
-def test_static_analysis_ranks_matmul_heavy_first():
-    d = 64
+def _heavy_light(d=64):
     w = jnp.zeros((d, d))
 
     def heavy(x):
@@ -22,7 +24,11 @@ def test_static_analysis_ranks_matmul_heavy_first():
 
     def light(x):
         return jnp.tanh(x) * 2 + 1
+    return heavy, light, d
 
+
+def test_static_analysis_ranks_matmul_heavy_first():
+    heavy, light, d = _heavy_light()
     ranked = rank_functions([
         ("light", light, (jnp.zeros((8, d)),)),
         ("heavy", heavy, (jnp.zeros((8, d)),)),
@@ -31,6 +37,25 @@ def test_static_analysis_ranks_matmul_heavy_first():
     assert ranked[0].heavy_ratio > 0.9
     assert ranked[1].heavy_ratio < 0.1
     assert "heavy" in report(ranked)
+
+
+def test_region_report_and_tags_match_ranking():
+    """The region-timeline pass agrees with the whole-function ranking:
+    the matmul chain is an mxu-class timeline whose report names the
+    regions, and tag_heavy selects it over the pointwise function."""
+    heavy, light, d = _heavy_light()
+    tl_heavy = segment(heavy, jnp.zeros((128, d)), name="heavy")
+    # a (4,)-element pointwise op is scalar-class bookkeeping (below one
+    # VPU lane row) — the decode-analogue the duty criterion must untag
+    tl_light = segment(light, jnp.zeros((4,)), name="light")
+    assert tl_heavy.mxu_flops > 0
+    assert tl_heavy.heavy_share > 0.9
+    assert any(r.klass == "heavy" and r.unit == "mxu"
+               for r in tl_heavy.regions)
+    rep = tl_heavy.report()
+    assert "mxu" in rep and "dot_general" in rep
+    assert "heavy" in tag_heavy([tl_heavy, tl_light])
+    assert "light" not in tag_heavy([tl_heavy, tl_light])
 
 
 def test_static_analysis_scan_multiplies():
@@ -46,6 +71,16 @@ def test_static_analysis_scan_multiplies():
     p1 = analyze_jaxpr(once, jnp.zeros((4, 32)))
     p8 = analyze_jaxpr(scanned, jnp.zeros((4, 32)))
     assert abs(p8.mxu_flops / p1.mxu_flops - 8.0) < 0.01
+
+
+def test_shim_matches_new_package():
+    """repro.core.static_analysis is a shim over repro.analysis: same
+    objects, same numbers."""
+    import repro.analysis as na
+    import repro.core.static_analysis as shim
+    assert shim.analyze_jaxpr is na.analyze_jaxpr
+    assert shim.FunctionProfile is na.FunctionProfile
+    assert shim.MXU_PRIMS == na.MXU_PRIMS
 
 
 def test_throttle_flamegraph_localizes_better_than_cycles():
