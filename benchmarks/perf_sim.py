@@ -25,8 +25,11 @@ are deterministic, so the regression gate (``--check-baseline``)
 compares (a) the measured chunked->horizon speedup ratio against the
 committed baseline ratio (machine-independent to first order: both
 modes run on the same host), (b) the deterministic horizon event
-counts, and (c) the matrix parallel throughput (serial/parallel wall
-ratio — again a same-host ratio), failing on a >30% regression of any.
+counts, (c) the matrix parallel throughput (serial/parallel wall
+ratio — again a same-host ratio), failing on a >30% regression of any,
+and (d) a per-leg floor on ``webserver/avx512/specialized`` — the leg
+whose event storm ISSUE 8 fixed — gating both its absolute speedup and
+its deterministic event count.
 
   PYTHONPATH=src python benchmarks/run.py perf --smoke \
       --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
@@ -42,6 +45,19 @@ import time
 from pathlib import Path
 
 REGRESSION_TOLERANCE = 0.30     # fail if >30% worse than baseline
+
+# Per-leg gate for the layout the event-horizon executor historically
+# degenerated on (the specialized-core event storm): aggregate wins must
+# not hide this leg collapsing again. The event ceiling is the sharp
+# gate — horizon event counts are deterministic, and the storm showed up
+# as a 10x event blow-up vs the shared layout. The wall-speedup floor is
+# a coarse same-host sanity bound: the leg's semantic floor is ~2 heap
+# events per cross-core migration (requeue visibility at t+IPI, then the
+# pick), and with ~44k migrations per simulated second both modes share
+# most of their scheduler-round cost, capping the achievable ratio well
+# below the shared layout's.
+SPECIALIZED_LEG = "webserver/avx512/specialized"
+SPECIALIZED_SPEEDUP_FLOOR = 1.2
 
 
 def _time(fn):
@@ -214,6 +230,25 @@ def check_baseline(result: dict, baseline: dict) -> list:
             f"{ceil:.0f} (baseline {b_agg['horizon_events_total']} "
             f"+ {REGRESSION_TOLERANCE:.0%}; events are deterministic — "
             f"this is a real throughput regression, not noise)")
+    r_leg = result["workloads"].get(SPECIALIZED_LEG)
+    b_leg = base.get("workloads", {}).get(SPECIALIZED_LEG)
+    if r_leg is not None:
+        if r_leg["speedup"] < SPECIALIZED_SPEEDUP_FLOOR:
+            fails.append(
+                f"{SPECIALIZED_LEG} speedup {r_leg['speedup']} < "
+                f"{SPECIALIZED_SPEEDUP_FLOOR} (absolute floor — the "
+                f"specialized-layout leg must not fall back to chunked "
+                f"cost)")
+        if b_leg is not None:
+            leg_ceil = (b_leg["horizon"]["events"]
+                        * (1.0 + REGRESSION_TOLERANCE))
+            if r_leg["horizon"]["events"] > leg_ceil:
+                fails.append(
+                    f"{SPECIALIZED_LEG} horizon events "
+                    f"{r_leg['horizon']['events']} > {leg_ceil:.0f} "
+                    f"(baseline {b_leg['horizon']['events']} + "
+                    f"{REGRESSION_TOLERANCE:.0%}; deterministic — the "
+                    f"specialized event storm is back)")
     # matrix parallel throughput: the serial/parallel wall ratio is a
     # same-host ratio like the chunked/horizon speedup, so it transfers
     # across machines to first order. The ratio is bounded by worker

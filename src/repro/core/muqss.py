@@ -28,10 +28,11 @@ rr_interval; with equal priorities this is FIFO-ish within a quantum.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core.runqueue import CoreRunQueues
+from repro.core.runqueue import QUEUES, CoreRunQueues
 from repro.core.task import Task, TaskType
 from repro.sched.policy import (LIGHT_PENALTY, Policy, SharedBaselinePolicy,
                                 SpecializedPolicy)
@@ -84,6 +85,13 @@ class Scheduler:
             else cfg.default_policy(self.topo)
         self.n_cores = self.topo.n_units
         self.rqs = [CoreRunQueues(i) for i in range(self.n_cores)]
+        # Global steal index: one heap per queue type over every core's
+        # alive queue entries, keyed (deadline, rq_id, seq). pick_next
+        # reads the per-type minima in O(log n) instead of rescanning
+        # all cores' queues per invocation; the entries are the
+        # runqueues' own records (repro.core.runqueue.DeadlineQueue),
+        # so lazy deletion is shared — a local pop kills the index copy.
+        self._steal_idx: List[list] = [[] for _ in QUEUES]
         # cores of dedicated heavy pools (empty when nothing is split)
         self.avx_cores: Set[int] = set()
         if len(self.topo.pools_with(WorkKind.HEAVY)) < len(self.topo.pools):
@@ -99,6 +107,13 @@ class Scheduler:
         # is NOTIFIED the moment an IPI is raised, so it can invalidate
         # the target core's execution horizon instead of polling.
         self.preempt_listener: Optional[Callable[[int, float], None]] = None
+        # Running-type probe. The event-horizon simulator commits type
+        # changes optimistically inside execution spans, so a running
+        # task's ``ttype`` attribute may already hold a *future* value.
+        # The IPI-target scan below must see the type as of ``now``; the
+        # simulator registers this hook to answer from its span logs.
+        self.ttype_probe: Optional[Callable[[int, Task, float],
+                                            TaskType]] = None
         self._avx_sorted: Tuple[int, ...] = tuple(sorted(self.avx_cores))
         # The topology is static for a Scheduler's lifetime, so the
         # per-core policy answers are snapshotted off the hot path
@@ -164,7 +179,9 @@ class Scheduler:
         if fresh_deadline:
             self.set_deadline(task, now)
         core = self._choose_core(task)
-        self.rqs[core].push(task)
+        e = self.rqs[core].push(task)
+        heapq.heappush(self._steal_idx[task.ttype.value],
+                       (e[0], core, e[1], e))
         return core
 
     def _choose_core(self, task: Task) -> int:
@@ -181,32 +198,33 @@ class Scheduler:
     # --------------------------------------------------------- pick next
 
     def pick_next(self, core: int, now: float) -> Optional[Task]:
-        """MuQSS selection: best deadline among own queues and every other
-        core's queues (lockless steal). Strict-< keeps the first rq /
-        first allowed queue on ties; the flattened precomputed scan
-        touches each queue once with no enum hashing."""
+        """MuQSS selection: best deadline among own queues and every
+        other core's queues (lockless steal — eligibility is global,
+        placement is local). The global per-type steal index replaces
+        the legacy flattened all-cores rescan: each allowed queue type
+        costs one lazy heap peek. The legacy loop visited (rq_id,
+        scan_pos) in lexicographic order with strict-<, so equal
+        deadlines kept the lowest rq then the first allowed queue —
+        exactly the (deadline+penalty, rq_id, scan_pos) lexicographic
+        minimum the index keys reproduce."""
         self.invocations += 1
-        scan = self._scan[core]
-        best_d = None
-        best = None  # (rq_index, ttype_value)
-        for rq in self.rqs:
-            # eligibility: a task queued on an AVX core's scalar queue may
-            # be stolen by scalar cores and vice versa — queues are global
-            # in eligibility, local in placement.
-            if not rq.n_queued:
+        idx = self._steal_idx
+        best_d = best_rq = best_qv = None
+        for qv, pen in self._scan[core]:
+            h = idx[qv]
+            while h and not h[0][3][3]:   # entry popped/removed locally
+                heapq.heappop(h)
+            if not h:
                 continue
-            by_val = rq.by_val
-            for qv, pen in scan:
-                t = by_val[qv].peek()
-                if t is None:
-                    continue
-                d = t.deadline + pen
-                if best_d is None or d < best_d:
-                    best_d = d
-                    best = (rq.core_id, qv)
-        if best is None:
+            dline, rq_id = h[0][0], h[0][1]
+            d = dline + pen
+            if best_d is None or d < best_d or \
+                    (d == best_d and rq_id < best_rq):
+                best_d, best_rq, best_qv = d, rq_id, qv
+        if best_d is None:
             return None
-        rq_id, qv = best
+        heapq.heappop(idx[best_qv])
+        rq_id, qv = best_rq, best_qv
         task = self.rqs[rq_id].pop_by_val(qv)
         if task is None:
             return None
@@ -246,12 +264,15 @@ class Scheduler:
             # an idle heavy core will naturally pick the task up).
             preempt = None
             if dec.preempt:
+                probe = self.ttype_probe
                 for c in self._avx_sorted:
                     r = self.running.get(c)
-                    if r is not None and r.ttype == TaskType.SCALAR:
-                        preempt = c
-                        break
-                    if r is None:
+                    if r is not None:
+                        tt = r.ttype if probe is None else probe(c, r, now)
+                        if tt == TaskType.SCALAR:
+                            preempt = c
+                            break
+                    else:
                         preempt = None
                         break
             if preempt is not None:

@@ -18,26 +18,42 @@ QUEUES = (TaskType.SCALAR, TaskType.AVX, TaskType.UNTYPED)
 
 
 class DeadlineQueue:
-    """Min-heap by (deadline, seq) with lazy removal."""
+    """Min-heap by (deadline, seq) with lazy removal.
+
+    Entries are shared mutable records ``[deadline, seq, task, alive]``.
+    ``push`` returns the record so callers (the scheduler's global steal
+    index) can insert the *same* object into other heaps: a pop or
+    removal here flips ``alive`` and every other heap discards the entry
+    lazily on sight. The previous tid-keyed tombstone set only worked
+    inside one queue — a task popped here and re-queued elsewhere would
+    have matched its stale tid in a global index and been dropped twice.
+    """
+
+    __slots__ = ("_h", "_seq", "_by_tid", "_n")
 
     def __init__(self):
-        self._h: List[Tuple[float, int, Task]] = []
+        self._h: List[list] = []
         self._seq = itertools.count()
-        self._gone: set = set()
+        self._by_tid: Dict[int, list] = {}
         self._n = 0
 
-    def push(self, task: Task):
-        heapq.heappush(self._h, (task.deadline, next(self._seq), task))
+    def push(self, task: Task) -> list:
+        e = [task.deadline, next(self._seq), task, True]
+        heapq.heappush(self._h, e)
+        self._by_tid[task.tid] = e
         self._n += 1
+        return e
 
     def remove(self, task: Task):
-        self._gone.add(task.tid)
-        self._n -= 1
+        e = self._by_tid.pop(task.tid, None)
+        if e is not None:
+            e[3] = False
+            self._n -= 1
 
     def _settle(self):
-        while self._h and self._h[0][2].tid in self._gone:
-            _, _, t = heapq.heappop(self._h)
-            self._gone.discard(t.tid)
+        h = self._h
+        while h and not h[0][3]:
+            heapq.heappop(h)
 
     def peek(self) -> Optional[Task]:
         self._settle()
@@ -47,8 +63,11 @@ class DeadlineQueue:
         self._settle()
         if not self._h:
             return None
+        e = heapq.heappop(self._h)
+        e[3] = False
+        del self._by_tid[e[2].tid]
         self._n -= 1
-        return heapq.heappop(self._h)[2]
+        return e[2]
 
     def __len__(self):
         return max(self._n, 0)
@@ -75,9 +94,10 @@ class CoreRunQueues:
         for q in QUEUES:
             self.by_val[q.value] = self.queues[q]
 
-    def push(self, task: Task):
-        self.queues[task.ttype].push(task)
+    def push(self, task: Task) -> list:
+        e = self.queues[task.ttype].push(task)
         self.n_queued += 1
+        return e
 
     def remove(self, task: Task):
         self.queues[task.ttype].remove(task)

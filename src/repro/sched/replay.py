@@ -59,6 +59,7 @@ import atexit
 import json
 import os
 import time
+from contextlib import contextmanager
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -537,6 +538,21 @@ def _shutdown_pool():
 atexit.register(_shutdown_pool)
 
 
+@contextmanager
+def pool_failsafe():
+    """Exception-path teardown for ``--parallel`` entry points. The
+    persistent pool deliberately survives clean sweeps (fork +
+    interpreter startup dominate a parallel run), but an exception
+    escaping a fan-out — a failing leg, a KeyboardInterrupt — must not
+    leave workers behind for ``atexit`` to reap long after a CI step
+    already failed: shut the pool down before propagating."""
+    try:
+        yield
+    except BaseException:
+        _shutdown_pool()
+        raise
+
+
 def _worker_pool(workers: int):
     global _POOL, _POOL_SIZE
     if _POOL is not None and _POOL_SIZE != workers:
@@ -634,7 +650,8 @@ def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
         # legs fill workers as engine legs drain, no batch barrier
         pool = _worker_pool(parallel)
         chunk = max(1, len(legs) // (parallel * 4))
-        results = list(pool.map(_run_leg, legs, chunksize=chunk))
+        with pool_failsafe():
+            results = list(pool.map(_run_leg, legs, chunksize=chunk))
     else:
         results = [_run_leg(leg) for leg in legs]
     walls: Dict[str, float] = {}

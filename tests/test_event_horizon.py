@@ -282,6 +282,26 @@ def test_parallel_matrix_identical_to_serial():
         json.dumps(fanned, sort_keys=True)
 
 
+def test_pool_reaped_on_exception():
+    """The persistent worker pool survives clean sweeps but must be
+    torn down when an exception escapes a --parallel fan-out (a failing
+    leg in CI must not leak workers until atexit)."""
+    from repro.sched import replay
+    pool = replay._worker_pool(2)
+    assert replay._POOL is pool
+    with pytest.raises(RuntimeError, match="leg failed"):
+        with replay.pool_failsafe():
+            raise RuntimeError("leg failed")
+    assert replay._POOL is None
+    # a failing leg inside the real parallel path takes the same exit
+    with pytest.raises(Exception):
+        replay.scenario_matrix(scenarios=["steady"], duration_ms=500.0,
+                               n_devices=4, prefill_devices=1,
+                               policies=["no-such-policy"], parallel=2,
+                               simulator=False)
+    assert replay._POOL is None
+
+
 def test_idle_kick_prefers_lowest_eligible_core():
     """The lazy idle min-heaps must preserve the legacy policy: wake the
     lowest-numbered idle core the policy allows for the task type."""

@@ -1,0 +1,109 @@
+"""Differential fuzz of the IPI-exact rollback replay.
+
+A preemption IPI landing inside an optimistically committed span rolls
+the span back and re-runs it analytically up to the exact 25 µs chunk
+boundary the legacy polled loop would have used
+(``Simulator._replay``). This sweep plants an IPI at every µs
+offset inside a committed span — including exactly on chunk boundaries,
+at the span start, and past the span end — and asserts the horizon
+simulator stays bit-identical to ``strict_chunks=True``: integer
+counters, completion lists, flame deltas, and per-core
+``FrequencyDomain`` residency.
+
+Construction: on a 2-core layout with one dedicated AVX core, a victim
+SCALAR task is stolen by the (idle) AVX core and opens a long span
+there; a trigger task on the scalar core runs exactly ``off`` µs of
+scalar work and then declares AVX (the paper's ``with_avx()``), which
+requeues it to the AVX core and raises the IPI at a controlled time.
+The victim's body mixes stacks, sparse/dense sections and mid-span
+request completions so every replay path (bulk integrate, in-flight
+chunk completion, consuming chunk, next-item spill, RequestDone replay)
+is crossed somewhere in the sweep.
+
+The victim arrives 0.4 µs after the trigger so the two chunk grids are
+incommensurate: an IPI landing *exactly* on a chunk-start boundary is
+resolved by heap sequence numbers in strict mode (the polled flag may
+be raised before or after the same-timestamp chunk event depending on
+which chain pushed first), which no span-granularity replay can
+reconstruct — see the "boundary ties" note in core/simulator.py.
+"""
+import pytest
+
+from repro.core.license import LicenseConfig
+from repro.core.muqss import SchedConfig
+from repro.core.simulator import RequestDone, Simulator
+from repro.core.task import IClass, Segment, Task, TaskType, TypeChange
+from test_event_horizon import _assert_equivalent
+
+F0_KCPU = 2.8e3      # cycles per µs at nominal 2.8 GHz
+
+
+def _victim_body():
+    """~155 µs of scalar work on the AVX core: three stacks, a sparse
+    section, two mid-span completions, then a type change."""
+    yield Segment(30.0 * F0_KCPU, IClass.SCALAR, stack=("v", "a"))
+    yield RequestDone()
+    yield Segment(45.0 * F0_KCPU, IClass.SCALAR, stack=("v", "b"))
+    yield Segment(20.0 * F0_KCPU, IClass.SCALAR, dense=False,
+                  stack=("v", "b"))
+    yield RequestDone()
+    yield Segment(60.0 * F0_KCPU, IClass.SCALAR, stack=("v", "c"))
+    yield TypeChange(TaskType.AVX)
+    yield Segment(10.0 * 1.9e3, IClass.AVX512, dense=True,
+                  stack=("v", "crypto"))
+    yield RequestDone()
+
+
+def _trigger_body(off_us: float):
+    """``off_us`` of scalar work, then with_avx() -> migration + IPI."""
+    yield Segment(off_us * F0_KCPU, IClass.SCALAR, stack=("t", "pre"))
+    yield TypeChange(TaskType.AVX)
+    yield Segment(25.0 * 1.9e3, IClass.AVX512, dense=True,
+                  stack=("t", "crypto"))
+    yield TypeChange(TaskType.SCALAR)
+    yield Segment(15.0 * F0_KCPU, IClass.SCALAR, stack=("t", "post"))
+    yield RequestDone()
+
+
+def _run(off_us: float, spec: bool, strict: bool) -> Simulator:
+    sim = Simulator(SchedConfig(n_cores=2, n_avx_cores=1 if spec else 0,
+                                specialization=spec),
+                    LicenseConfig(), strict_chunks=strict)
+    sim.add_task(Task(_trigger_body(off_us), ttype=TaskType.SCALAR,
+                      name="trigger"), at=0.0)
+    sim.add_task(Task(_victim_body(), ttype=TaskType.SCALAR,
+                      name="victim"), at=0.4)
+    sim.run(5_000.0)
+    return sim
+
+
+@pytest.mark.parametrize("spec", [False, True],
+                         ids=["shared", "specialized"])
+def test_ipi_offset_sweep_bit_identical(spec):
+    saw_rollback = False
+    for off in range(0, 181):
+        a = _run(float(off), spec, strict=True)
+        b = _run(float(off), spec, strict=False)
+        ctx = f"off={off}/{'spec' if spec else 'shared'}"
+        _assert_equivalent(a, b, ctx)
+        # per-core FrequencyDomain residency, not just the aggregate
+        for core, (la, lb) in enumerate(zip(a.lic, b.lic)):
+            for k, v in la.snapshot().items():
+                assert v == pytest.approx(lb.snapshot()[k], rel=1e-9,
+                                          abs=1e-6), \
+                    f"{ctx}: core {core} domain {k}"
+        if spec and a.counters()["ipis"] > 0:
+            saw_rollback = True
+        if not spec:
+            assert a.counters()["ipis"] == 0, ctx
+    # the sweep is only meaningful if IPIs actually landed inside spans
+    assert saw_rollback == spec
+
+
+def test_sub_us_offsets_cross_chunk_boundaries():
+    """Fractional-µs offsets around the 25/50 µs chunk boundaries (the
+    strict-inequality consumption edge)."""
+    for off in (24.5, 24.999, 25.001, 25.5, 49.75, 50.25, 74.9, 75.1):
+        a = _run(off, True, strict=True)
+        b = _run(off, True, strict=False)
+        _assert_equivalent(a, b, f"off={off}")
