@@ -13,9 +13,12 @@ and event-horizon execution (the default) — across:
 
 plus the wall time of the full differential scenario matrix
 (``repro.sched.replay.scenario_matrix``) serial vs. fanned out across a
-process pool over the shared frozen traces, and the cluster tier: every
-registered fleet scenario (CLUSTER_SCENARIOS) replayed through the
-N-shard ``ClusterEngine`` under the multi-node oracle
+process pool over the shared frozen traces, the sweep fabric's
+committed >=500-leg trajectory cell (``repro.sched.sweep`` ``bench``
+preset, serial vs. parallel with workers/CPU metadata and a
+parallel-efficiency ratio), and the cluster tier: every registered
+fleet scenario (CLUSTER_SCENARIOS) replayed through the N-shard
+``ClusterEngine`` under the multi-node oracle
 (``repro.sched.replay.replay_cluster``), recording cluster throughput
 into the same artifact.
 
@@ -27,9 +30,11 @@ committed baseline ratio (machine-independent to first order: both
 modes run on the same host), (b) the deterministic horizon event
 counts, (c) the matrix parallel throughput (serial/parallel wall
 ratio — again a same-host ratio), failing on a >30% regression of any,
-and (d) a per-leg floor on ``webserver/avx512/specialized`` — the leg
+(d) a per-leg floor on ``webserver/avx512/specialized`` — the leg
 whose event storm ISSUE 8 fixed — gating both its absolute speedup and
-its deterministic event count.
+its deterministic event count, and (e) the sweep cell: zero oracle
+violations, no deterministic leg/completion shrink, and no
+parallel-efficiency regression at equal-or-more workers.
 
   PYTHONPATH=src python benchmarks/run.py perf --smoke \
       --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
@@ -138,6 +143,47 @@ def run_bench(smoke: bool = False, parallel: int = 0,
                 wall_serial / max(wall_par, 1e-9), 2),
         }
 
+    # the sweep fabric: the committed >=500-leg trajectory cell. The
+    # same spec runs serial then fanned out, so the parallel-efficiency
+    # ratio (serial_wall / (parallel_wall * workers)) is a same-host
+    # ratio like the chunked/horizon speedup. The matrix fan-out above
+    # already built the persistent pool at this worker count, so the
+    # parallel wall measures leg dispatch, not pool startup.
+    sweep_cell = None
+    if matrix:
+        from repro.sched.replay import _leg_trace, default_workers
+        from repro.sched.sweep import preset_spec, run_sweep
+        spec = preset_spec("bench-smoke" if smoke else "bench")
+        n_workers = parallel or default_workers()
+        # warm the parent trace cache outside both timed windows, so
+        # serial and parallel walls measure leg execution only (the
+        # serial run must not also pay one-time trace generation)
+        for leg in spec.legs():
+            _leg_trace(leg["scenario"], leg["duration_ms"], leg["seed"])
+        sw_serial = run_sweep(spec, workers=1)
+        sw_par = run_sweep(spec, workers=n_workers)
+        wall_serial = sw_serial["_meta"]["wall_s"]
+        wall_par = sw_par["_meta"]["wall_s"]
+        sweep_cell = {
+            "preset": spec.name,
+            "spec_hash": spec.spec_hash,
+            "n_legs": sw_par["n_legs"],
+            "workers": n_workers,
+            "cpu_count": os.cpu_count() or 1,
+            "workers_env": os.environ.get("REPRO_SWEEP_WORKERS"),
+            "wall_s_serial": round(wall_serial, 3),
+            "wall_s_parallel": round(wall_par, 3),
+            "parallel_speedup": round(
+                wall_serial / max(wall_par, 1e-9), 2),
+            "parallel_efficiency": round(
+                wall_serial / max(wall_par * n_workers, 1e-9), 3),
+            "n_violations": sw_par["n_violations"],
+            # deterministic: the same 500 legs complete the same
+            # requests on every machine — a sharp cross-host gate
+            "completed_total": sum(r["completed"]
+                                   for r in sw_par["rows"]),
+        }
+
     # the cluster tier: every registered fleet scenario through the
     # N-shard ClusterEngine under the multi-node oracle
     from repro.sched.replay import replay_cluster
@@ -191,8 +237,8 @@ def run_bench(smoke: bool = False, parallel: int = 0,
                   1e-9), 1),
     }
     return {"config": {"smoke": smoke}, "workloads": rows,
-            "matrix": matrix_cell, "cluster": cluster_cell,
-            "aggregate": aggregate}
+            "matrix": matrix_cell, "sweep": sweep_cell,
+            "cluster": cluster_cell, "aggregate": aggregate}
 
 
 def check_baseline(result: dict, baseline: dict) -> list:
@@ -264,6 +310,35 @@ def check_baseline(result: dict, baseline: dict) -> list:
                 f"{m_floor:.2f} (baseline {b_mat['parallel_speedup']} "
                 f"- {REGRESSION_TOLERANCE:.0%} at "
                 f"{b_mat['workers']} workers)")
+    # sweep fabric: violations and completion counts are deterministic
+    # (hard gates); parallel efficiency is a same-host ratio, gated
+    # like the matrix speedup only at equal-or-more workers (more
+    # workers must never be less efficient than the baseline recorded).
+    b_sw, r_sw = base.get("sweep"), result.get("sweep")
+    if r_sw is not None and r_sw["n_violations"] > 0:
+        fails.append(
+            f"sweep reported {r_sw['n_violations']} oracle violations "
+            f"(must be 0)")
+    if b_sw and r_sw:
+        if r_sw["n_legs"] < b_sw["n_legs"]:
+            fails.append(
+                f"sweep compiled {r_sw['n_legs']} legs < baseline "
+                f"{b_sw['n_legs']} (the committed grid shrank)")
+        if r_sw["completed_total"] < b_sw["completed_total"]:
+            fails.append(
+                f"sweep completed {r_sw['completed_total']} requests < "
+                f"baseline {b_sw['completed_total']} (deterministic — "
+                f"a real scheduling regression)")
+        if r_sw.get("workers", 0) >= b_sw.get("workers", 0):
+            e_floor = b_sw["parallel_efficiency"] \
+                * (1.0 - REGRESSION_TOLERANCE)
+            if r_sw["parallel_efficiency"] < e_floor:
+                fails.append(
+                    f"sweep parallel efficiency "
+                    f"{r_sw['parallel_efficiency']} < {e_floor:.3f} "
+                    f"(baseline {b_sw['parallel_efficiency']} - "
+                    f"{REGRESSION_TOLERANCE:.0%} at "
+                    f"{b_sw['workers']} workers)")
     b_cl, r_cl = base.get("cluster"), result.get("cluster")
     if r_cl is not None and r_cl["n_violations"] > 0:
         fails.append(
@@ -324,6 +399,12 @@ def main(argv=None) -> int:
               f"{m['wall_s_serial']:8.3f}s -> {m['wall_s_parallel']:8.3f}s "
               f"({m['workers']} workers / {m['cpu_count']} cpus, "
               f"{m['parallel_speedup']}x)")
+    sw = result.get("sweep")
+    if sw is not None:
+        print(f"{'sweep ' + sw['preset'] + ' (' + str(sw['n_legs']) + ' legs)':38s} "
+              f"{sw['wall_s_serial']:8.3f}s -> {sw['wall_s_parallel']:8.3f}s "
+              f"({sw['workers']} workers / {sw['cpu_count']} cpus, "
+              f"efficiency {sw['parallel_efficiency']})")
     cl = result["cluster"]
     for name, cell in cl["scenarios"].items():
         print(f"{'cluster/' + name:38s} wall={cell['wall_s']:8.3f}s "

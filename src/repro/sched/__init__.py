@@ -5,8 +5,10 @@ cluster tier (N engine shards behind a frequency-aware router).
 `core/muqss.py` (OS simulator) and `sched/engine.py` (serving) both
 consume this API; `sched/cluster.py` interleaves N engines on one heap
 behind SLO-aware admission control; `sched/workload.py` generates
-seeded, JSON-replayable traces and `sched/replay.py` replays one trace
-differentially through every registered policy and mechanism."""
+seeded, JSON-replayable traces, `sched/replay.py` replays one trace
+differentially through every registered policy and mechanism, and
+`sched/sweep.py` compiles declarative grid specs over all of it into
+cached, cost-ordered parallel sweeps."""
 from repro.sched.cluster import (ClusterConfig, ClusterEngine,
                                  ClusterMetrics, ClusterTopology, Router,
                                  ShardSpec)
@@ -24,6 +26,11 @@ from repro.sched.policy import (CLUSTER_POLICIES, POLICIES, AdaptivePolicy,
                                 register_cluster_policy, register_policy,
                                 registered_cluster_policies,
                                 registered_policies)
+from repro.sched.sweep import (PRESETS, AxisGrid, SweepCache, SweepSpec,
+                               SweepSpecError, baseline_deltas, leg_key,
+                               matrix_spec, preset_spec, reduce_rows,
+                               register_preset, run_legs, run_sweep,
+                               sweep_json, tidy_rows)
 from repro.sched.topology import Pool, Topology, WorkKind
 from repro.sched.workload import (CLUSTER_SCENARIOS, SCENARIOS, Tenant,
                                   Trace, WorkloadSpec, poisson_workload,
@@ -32,18 +39,22 @@ from repro.sched.workload import (CLUSTER_SCENARIOS, SCENARIOS, Tenant,
                                   scenario_trace)
 
 __all__ = [
-    "AdaptivePolicy", "CLUSTER_POLICIES", "CLUSTER_SCENARIOS",
+    "AdaptivePolicy", "AxisGrid", "CLUSTER_POLICIES", "CLUSTER_SCENARIOS",
     "ClusterAdaptivePolicy", "ClusterConfig", "ClusterEngine",
     "ClusterFreqAwarePolicy", "ClusterMetrics", "ClusterPolicy",
     "ClusterRoundRobinPolicy", "ClusterTopology", "CohortPolicy",
     "ENGINE_FREQ_MS", "FreqDomainConfig", "FrequencyDomain",
-    "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "Policy", "Pool",
-    "ResidencyWindow", "Router", "SCENARIOS", "SharedBaselinePolicy",
-    "ShardSpec", "ShardView", "SpecializedPolicy", "Tenant", "Topology",
-    "Trace", "TypeChangeDecision", "WorkKind", "WorkloadSpec",
-    "light_penalty", "make_cluster_policy", "make_policy",
-    "poisson_workload", "register_cluster_policy", "register_policy",
+    "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "PRESETS", "Policy",
+    "Pool", "ResidencyWindow", "Router", "SCENARIOS",
+    "SharedBaselinePolicy", "ShardSpec", "ShardView",
+    "SpecializedPolicy", "SweepCache", "SweepSpec", "SweepSpecError",
+    "Tenant", "Topology", "Trace", "TypeChangeDecision", "WorkKind",
+    "WorkloadSpec", "baseline_deltas", "leg_key", "light_penalty",
+    "make_cluster_policy", "make_policy", "matrix_spec",
+    "poisson_workload", "preset_spec", "reduce_rows",
+    "register_cluster_policy", "register_policy", "register_preset",
     "register_cluster_scenario", "register_scenario",
-    "registered_cluster_policies", "registered_policies",
-    "scenario_spec", "scenario_trace",
+    "registered_cluster_policies", "registered_policies", "run_legs",
+    "run_sweep", "scenario_spec", "scenario_trace", "sweep_json",
+    "tidy_rows",
 ]

@@ -475,16 +475,15 @@ def replay_cluster(trace: Trace, cluster_policy: str = "cluster-adaptive",
 
 # --------------------------------------------------------------- matrix
 
-# Module-level worker functions: a process pool can only dispatch
-# importable callables. Legs reference their trace by (scenario,
-# duration, seed) coordinates against the module-level trace cache:
-# the parent populates the cache BEFORE the worker pool exists, so
-# fork-started workers inherit every frozen trace with zero pickling
-# per leg, and a worker that does not inherit (spawn start, or a pool
-# outliving a cache update) regenerates the identical bytes from the
-# deterministic generator. Each leg returns (scenario, slot, key,
-# result, wall_s) so the parent reassembles the matrix
-# deterministically regardless of completion order.
+# Module-level trace cache: a process pool can only dispatch
+# importable callables, so legs reference their trace by (scenario,
+# duration, seed) coordinates against this cache. The parent populates
+# it BEFORE the worker pool exists, so fork-started workers inherit
+# every frozen trace with zero pickling per leg, and a worker that does
+# not inherit (spawn start, or a pool outliving a cache update)
+# regenerates the identical bytes from the deterministic generator.
+# Leg execution itself lives in repro.sched.sweep.run_leg — the matrix
+# is a thin sweep over its default grid (sweep.matrix_spec).
 
 _TRACE_CACHE: Dict[Tuple[str, float, int], Trace] = {}
 
@@ -496,28 +495,6 @@ def _leg_trace(name: str, duration_ms: float, seed: int) -> Trace:
         tr = _TRACE_CACHE[key] = scenario_trace(
             name, duration_ms=duration_ms, seed=seed)
     return tr
-
-
-def _run_leg(leg) -> Tuple[str, str, str, Dict, float]:
-    t0 = time.perf_counter()
-    if leg[0] == "engine":
-        _, name, pol, n_devices, prefill_devices, dur, seed = leg
-        res = (name, "engine", pol,
-               replay_engine(_leg_trace(name, dur, seed), pol,
-                             n_devices=n_devices,
-                             prefill_devices=prefill_devices))
-    elif leg[0] == "cluster":
-        _, name, cpol, n_shards, dps, pfd, dur, seed = leg
-        res = (name, "cluster", cpol,
-               replay_cluster(_leg_trace(name, dur, seed), cpol,
-                              n_shards=n_shards, devices_per_shard=dps,
-                              prefill_devices=pfd))
-    else:
-        from repro.core.experiments import run_trace_sim
-        _, name, spec, dur, seed = leg
-        res = (name, "simulator", "specialized" if spec else "shared",
-               run_trace_sim(_leg_trace(name, dur, seed), spec))
-    return res + (time.perf_counter() - t0,)
 
 
 # Persistent worker pool: process startup (fork + interpreter state) is
@@ -565,7 +542,19 @@ def _worker_pool(workers: int):
 
 
 def default_workers() -> int:
-    """CPU-aware worker count for ``--parallel`` without an argument."""
+    """CPU-aware worker count for ``--parallel`` without an argument.
+    A ``REPRO_SWEEP_WORKERS`` env var overrides the CPU count — CI and
+    local runs pin it so recorded throughput numbers are honestly
+    comparable; the resolved value (and whether the override was set)
+    lands in sweep/matrix result metadata."""
+    env = os.environ.get("REPRO_SWEEP_WORKERS")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            raise ValueError(
+                f"REPRO_SWEEP_WORKERS must be an integer, got {env!r}"
+            ) from None
     n = os.cpu_count() or 1
     try:                               # respect container CPU limits
         n = min(n, len(os.sched_getaffinity(0)))
@@ -587,14 +576,20 @@ def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
     simulator, + N-shard cluster legs when ``cluster > 0``), one
     identical trace per scenario.
 
-    ``parallel=N`` fans the independent scenario x policy x mechanism
-    legs across a persistent process pool of N workers (``-1`` =
-    CPU-aware default) over the shared frozen traces — generated once
-    in the parent before any worker exists, inherited at fork, and
-    regenerated bit-identically by any worker that missed the fork.
-    Legs are pure functions of their inputs, dispatched in chunks, and
-    reassembled in registry order: the matrix is identical to the
-    serial one. ``parallel<=1`` keeps the serial path.
+    The matrix is a thin sweep over its default grid: the legs compile
+    through ``repro.sched.sweep.matrix_spec`` and execute through the
+    sweep runtime. ``parallel=N`` fans the independent scenario x
+    policy x mechanism legs across a persistent process pool of N
+    workers (``-1`` = CPU-aware default, honoring the
+    ``REPRO_SWEEP_WORKERS`` override) over the shared frozen traces —
+    generated once in the parent before any worker exists, inherited
+    at fork, and regenerated bit-identically by any worker that missed
+    the fork. Legs are pure functions of their inputs, submitted
+    individually in descending cost-estimate order (longest first, so
+    unequal-cost legs no longer strand a straggler chunk at the end of
+    the sweep) and reassembled in compilation order: the matrix is
+    identical to the serial one. ``parallel<=1`` keeps the serial
+    path.
 
     ``cluster=N`` adds an N-shard cluster leg per scenario and cluster
     policy (default cluster-rr + cluster-adaptive), each shard sized
@@ -636,33 +631,30 @@ def scenario_matrix(scenarios: Optional[Sequence[str]] = None, *,
             out[name]["simulator"] = {}
         if cluster:
             out[name]["cluster"] = {}
-    legs = [("engine", name, pol, n_devices, prefill_devices,
-             duration_ms, seed) for name in names for pol in pols]
-    if cluster:
-        legs += [("cluster", name, cpol, cluster, dps, pfd,
-                  duration_ms, seed) for name in names for cpol in cpols]
-    if simulator:
-        legs += [("sim", name, spec, duration_ms, seed)
-                 for name in names for spec in (False, True)]
+    from repro.sched.sweep import matrix_spec, run_legs
+    spec = matrix_spec(names, pols, duration_ms=duration_ms, seed=seed,
+                       n_devices=n_devices,
+                       prefill_devices=prefill_devices,
+                       simulator=simulator, cluster=cluster,
+                       cluster_policies=cpols)
+    legs = spec.legs()
     t_start = time.perf_counter()
-    if parallel and parallel > 1:
-        # one combined chunked map over the persistent pool: simulator
-        # legs fill workers as engine legs drain, no batch barrier
-        pool = _worker_pool(parallel)
-        chunk = max(1, len(legs) // (parallel * 4))
-        with pool_failsafe():
-            results = list(pool.map(_run_leg, legs, chunksize=chunk))
-    else:
-        results = [_run_leg(leg) for leg in legs]
+    results, stats = run_legs(
+        legs, workers=parallel if parallel and parallel > 1 else 1)
     walls: Dict[str, float] = {}
-    for name, slot, key, res, wall in results:
-        out[name][slot][key] = res
-        walls[f"{name}/{slot}/{key}"] = round(wall, 4)
+    for leg, res in zip(legs, results):
+        slot = leg["mechanism"]
+        out[leg["scenario"]][slot][leg["policy"]] = res
+        wall = stats["leg_walls"].get(leg["key"])
+        if wall is not None:
+            walls[f"{leg['scenario']}/{slot}/{leg['policy']}"] = wall
     if timing:
         out["_timing"] = {
             "legs": walls,
             "wall_s": round(time.perf_counter() - t_start, 4),
-            "workers": parallel if parallel and parallel > 1 else 1}
+            "workers": stats["workers"],
+            "cpu_count": stats["cpu_count"],
+            "workers_env": stats["workers_env"]}
     for name in names:
         cell = out[name]
         if "shared" in cell["engine"] and "specialized" in cell["engine"]:

@@ -1,0 +1,394 @@
+"""Sweep fabric (repro.sched.sweep): spec grammar, compilation
+determinism, canonical round-trips, the content-hash result cache with
+resume semantics, cost-ordered dispatch, the baseline-delta/reduction
+tables, and the matrix-equivalence contract (a sweep over the matrix's
+default grid is byte-identical to ``scenario_matrix``'s legs)."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.sched.replay import default_workers, scenario_matrix
+from repro.sched.sweep import (AxisGrid, SweepCache, SweepSpec,
+                               SweepSpecError, baseline_deltas,
+                               estimate_cost, leg_key, matrix_spec,
+                               preset_spec, reduce_rows, run_leg,
+                               run_legs, run_sweep, sweep_json,
+                               tidy_rows)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+
+DUR = 1_500.0
+
+
+def small_spec(**kw) -> SweepSpec:
+    base = dict(mechanism="engine", duration_ms=DUR, n_devices=8,
+                prefill_devices=2)
+    return SweepSpec(
+        name="small",
+        grids=(AxisGrid(base=base,
+                        axes={"scenario": ("steady", "bursty"),
+                              "policy": ("shared", "specialized")}),),
+        **kw)
+
+
+# ------------------------------------------------------ spec compilation
+
+
+def test_compilation_is_deterministic():
+    spec = preset_spec("ci-smoke")
+    a = [leg["key"] for leg in spec.legs()]
+    b = [leg["key"] for leg in spec.legs()]
+    assert a == b
+    assert len(a) == len(set(a))        # keys are unique
+
+
+def test_spec_round_trips_through_canonical_json():
+    for name in ("ci-smoke", "bench-smoke", "matrix",
+                 "freq-hysteresis", "cluster-scaling"):
+        spec = preset_spec(name)
+        rt = SweepSpec.from_dict(json.loads(spec.canonical_json()))
+        assert rt.canonical_json() == spec.canonical_json(), name
+        assert rt.spec_hash == spec.spec_hash, name
+        # round-tripping preserves compilation ORDER, not just the set
+        assert [leg["key"] for leg in rt.legs()] \
+            == [leg["key"] for leg in spec.legs()], name
+
+
+def test_leg_key_is_content_hash():
+    spec = small_spec()
+    legs = spec.legs()
+    for leg in legs:
+        assert leg["key"] == leg_key(leg)
+    # a changed coordinate changes the key
+    other = dict(legs[0], seed=legs[0]["seed"] + 1)
+    assert leg_key(other) != legs[0]["key"]
+
+
+def test_defaults_are_explicit_in_legs():
+    """Normalization fills every schema field, so making a default
+    explicit in the spec does not change the leg key."""
+    implicit = SweepSpec(name="a", grids=(AxisGrid(
+        base={"mechanism": "engine", "scenario": "steady",
+              "duration_ms": DUR}),)).legs()
+    explicit = SweepSpec(name="b", grids=(AxisGrid(
+        base={"mechanism": "engine", "scenario": "steady",
+              "duration_ms": DUR, "policy": "specialized",
+              "n_devices": 16, "prefill_devices": 4}),)).legs()
+    assert implicit[0]["key"] == explicit[0]["key"]
+
+
+def test_zip_axes_advance_in_lockstep():
+    spec = SweepSpec(name="z", grids=(AxisGrid(
+        base={"mechanism": "engine", "scenario": "steady",
+              "duration_ms": DUR},
+        axes={"policy": ("shared", "specialized")},
+        zips=({"seed": (0, 1, 2),
+               "freq": (None, {"hysteresis": 4.0},
+                        {"hysteresis": 8.0})},)),))
+    legs = spec.legs()
+    assert len(legs) == 6               # 2 policies x 3 zipped, not x9
+    by_seed = {leg["seed"]: leg["freq"] for leg in legs}
+    assert by_seed[0] is None
+    assert by_seed[1] == {"hysteresis": 4.0}
+    assert by_seed[2] == {"hysteresis": 8.0}
+
+
+def test_unequal_zip_lengths_rejected():
+    spec = SweepSpec(name="z", grids=(AxisGrid(
+        base={"mechanism": "engine", "scenario": "steady"},
+        zips=({"seed": (0, 1), "duration_ms": (DUR,)},)),))
+    with pytest.raises(SweepSpecError, match="unequal lengths"):
+        spec.legs()
+
+
+def test_overrides_match_and_set():
+    spec = SweepSpec(
+        name="o",
+        grids=(AxisGrid(base={"mechanism": "engine",
+                              "duration_ms": DUR},
+                        axes={"scenario": ("steady", "bursty")}),),
+        overrides=({"match": {"scenario": "bursty"},
+                    "set": {"duration_ms": 900.0}},))
+    legs = {leg["scenario"]: leg for leg in spec.legs()}
+    assert legs["steady"]["duration_ms"] == DUR
+    assert legs["bursty"]["duration_ms"] == 900.0
+
+
+def test_duplicate_legs_dedup_to_first():
+    spec = SweepSpec(name="d", grids=(
+        AxisGrid(base={"mechanism": "engine", "scenario": "steady",
+                       "duration_ms": DUR}),
+        AxisGrid(base={"mechanism": "engine", "scenario": "steady",
+                       "duration_ms": DUR}),))
+    assert len(spec.legs()) == 1
+
+
+# ---------------------------------------------------- negative validation
+
+
+@pytest.mark.parametrize("base,msg", [
+    ({"mechanism": "engine", "scenario": "no-such-scenario"},
+     "unregistered scenario"),
+    ({"mechanism": "engine", "scenario": "steady",
+      "policy": "no-such-policy"}, "unregistered engine policy"),
+    ({"mechanism": "cluster", "scenario": "fleet_steady",
+      "policy": "specialized"}, "unregistered cluster policy"),
+    ({"mechanism": "simulator", "scenario": "steady",
+      "policy": "adaptive"}, "simulator policy"),
+    ({"mechanism": "warp-drive", "scenario": "steady"},
+     "unknown mechanism"),
+    ({"mechanism": "engine", "scenario": "steady",
+      "n_shards": 4}, "unknown leg field"),
+    ({"mechanism": "engine", "scenario": "steady",
+      "freq": {"warp_factor": 9}}, "unknown FreqDomainConfig"),
+])
+def test_invalid_specs_fail_at_compile_time(base, msg):
+    spec = SweepSpec(name="bad", grids=(AxisGrid(base=base),))
+    with pytest.raises(SweepSpecError, match=msg):
+        spec.legs()
+
+
+# ------------------------------------------------------- cache + resume
+
+
+def test_cold_run_equals_resumed_run(tmp_path):
+    spec = small_spec()
+    cold = run_sweep(spec, workers=1, cache_dir=tmp_path)
+    assert cold["_meta"]["ran"] == len(spec.legs())
+    assert cold["_meta"]["cached"] == 0
+    warm = run_sweep(spec, workers=1, cache_dir=tmp_path)
+    assert warm["_meta"]["ran"] == 0
+    assert warm["_meta"]["cached"] == len(spec.legs())
+    assert sweep_json(cold, meta=False) == sweep_json(warm, meta=False)
+
+
+def test_interrupted_sweep_resumes_only_missing_legs(tmp_path):
+    spec = small_spec()
+    cold = run_sweep(spec, workers=1, cache_dir=tmp_path)
+    # simulate an interruption: drop half the cached legs
+    files = sorted(tmp_path.glob("*.json"))
+    for f in files[: len(files) // 2]:
+        f.unlink()
+    resumed = run_sweep(spec, workers=1, cache_dir=tmp_path)
+    assert resumed["_meta"]["ran"] == len(files) // 2
+    assert resumed["_meta"]["cached"] == len(files) - len(files) // 2
+    assert sweep_json(cold, meta=False) == sweep_json(resumed,
+                                                      meta=False)
+
+
+def test_cache_rejects_mismatched_leg(tmp_path):
+    """A cache entry whose stored leg does not match the requested one
+    (hash collision, hand edit) is a miss, not a wrong answer."""
+    spec = small_spec()
+    leg = spec.legs()[0]
+    cache = SweepCache(tmp_path)
+    forged = dict(leg, scenario="bursty")
+    cache_path = tmp_path / f"{leg['key']}.json"
+    cache_path.write_text(json.dumps({"leg": forged,
+                                      "result": {"bogus": 1}}))
+    assert cache.get(leg) is None
+    (tmp_path / f"{leg['key']}.json").write_text("{truncated")
+    assert cache.get(leg) is None
+
+
+def test_seed_override_changes_every_default_seed_leg():
+    spec = small_spec()
+    a = run_sweep(spec, workers=1)
+    b = run_sweep(spec, workers=1, seed=7)
+    assert all(r["seed"] == 0 for r in a["rows"])
+    assert all(r["seed"] == 7 for r in b["rows"])
+    assert a["spec_hash"] != b["spec_hash"]
+
+
+# ------------------------------------------------------ dispatch order
+
+
+def test_dispatch_is_cost_ordered_longest_first():
+    spec = SweepSpec(name="c", grids=(AxisGrid(
+        base={"mechanism": "engine", "scenario": "steady",
+              "n_devices": 8, "prefill_devices": 2},
+        axes={"duration_ms": (500.0, 2_000.0, 1_000.0)}),))
+    legs = spec.legs()
+    done = []
+    run_legs(legs, workers=1,
+             on_result=lambda i, leg, res: done.append(leg))
+    costs = [estimate_cost(leg) for leg in done]
+    assert costs == sorted(costs, reverse=True)
+    assert done[0]["duration_ms"] == 2_000.0
+
+
+def test_estimate_cost_ranks_mechanisms():
+    eng, sim, clu = (SweepSpec(name="x", grids=(AxisGrid(
+        base={"mechanism": m, "scenario": s, "duration_ms": DUR}),)
+        ).legs()[0]
+        for m, s in (("engine", "steady"), ("simulator", "steady"),
+                     ("cluster", "fleet_steady")))
+    assert estimate_cost(sim) > estimate_cost(eng)
+    assert estimate_cost(clu) > estimate_cost(eng)
+
+
+# ------------------------------------------------- matrix equivalence
+
+
+def test_sweep_legs_byte_identical_to_scenario_matrix():
+    """The matrix is a thin sweep over its default grid: every leg
+    result of the compiled matrix spec serializes byte-identically to
+    the corresponding serial ``scenario_matrix`` cell."""
+    names, pols = ["steady"], ["shared", "specialized"]
+    kw = dict(duration_ms=DUR, n_devices=8, prefill_devices=2)
+    matrix = scenario_matrix(scenarios=names, policies=pols, **kw)
+    spec = matrix_spec(names, pols, simulator=True, **kw)
+    for leg in spec.legs():
+        slot = matrix[leg["scenario"]][leg["mechanism"]]
+        assert json.dumps(run_leg(leg), sort_keys=True) \
+            == json.dumps(slot[leg["policy"]], sort_keys=True), leg
+
+
+# ------------------------------------------------------ the freq axis
+
+
+def test_freq_axis_changes_the_physics():
+    """A FreqDomainConfig override must actually reach the engine: a
+    longer revert hysteresis keeps pools at reduced frequency longer
+    (more slow-clock residency), never less."""
+    base = {"mechanism": "engine", "scenario": "steady",
+            "duration_ms": 4_000.0, "policy": "shared",
+            "n_devices": 8, "prefill_devices": 2}
+    spec = SweepSpec(name="f", grids=(AxisGrid(
+        base=base, axes={"freq": (None, {"hysteresis": 20.0})}),))
+    legs = spec.legs()
+    results = [run_leg(leg) for leg in legs]
+    rows = tidy_rows(legs, results)
+    by_h = {r.get("freq.hysteresis"): r for r in rows}
+    assert by_h[20.0]["license_residency"] \
+        > by_h[None]["license_residency"]
+    assert by_h[20.0]["avg_freq_ghz"] < by_h[None]["avg_freq_ghz"]
+
+
+# ------------------------------------------------------- aggregation
+
+
+@pytest.fixture(scope="module")
+def ci_result():
+    return run_sweep(preset_spec("ci-smoke"), workers=1)
+
+
+def test_rows_cover_every_leg_with_violations_zero(ci_result):
+    spec = preset_spec("ci-smoke")
+    assert ci_result["n_legs"] == len(spec.legs())
+    assert len(ci_result["rows"]) == ci_result["n_legs"]
+    assert ci_result["n_violations"] == 0
+    keys = {leg["key"] for leg in spec.legs()}
+    assert {r["key"] for r in ci_result["rows"]} == keys
+
+
+def test_baseline_deltas_reduce_variability(ci_result):
+    """The paper headline must survive the sweep aggregation: every
+    engine specialized-vs-shared delta row shows reduced variability."""
+    deltas = [d for d in ci_result["deltas"]
+              if d["mechanism"] == "engine"
+              and d["policy"] == "specialized"]
+    assert deltas, "no engine specialized deltas in ci-smoke"
+    for d in deltas:
+        assert d["variability_reduction"] > 0, d
+        assert "energy_delta" in d and "residency_delta" in d
+
+
+def test_reduce_rows_groups_and_averages(ci_result):
+    red = reduce_rows(ci_result["rows"],
+                      by=["mechanism", "scenario", "policy"])
+    total = sum(r["n"] for r in red)
+    assert total == len(ci_result["rows"])
+    triples = [(r["mechanism"], r["scenario"], r["policy"])
+               for r in red]
+    assert triples == sorted(triples)
+    eng = next(r for r in red if r["mechanism"] == "engine")
+    assert isinstance(eng["itl_p99_ms"], float)
+
+
+def test_deltas_are_pure_rows_function(ci_result):
+    assert baseline_deltas(ci_result["rows"]) == ci_result["deltas"]
+
+
+# ------------------------------------------- workers metadata + override
+
+
+def test_default_workers_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "3")
+    assert default_workers() == 3
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "junk")
+    with pytest.raises(ValueError, match="REPRO_SWEEP_WORKERS"):
+        default_workers()
+    monkeypatch.delenv("REPRO_SWEEP_WORKERS")
+    assert default_workers() >= 1
+
+
+def test_sweep_meta_records_workers_honestly(monkeypatch):
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "1")
+    res = run_sweep(small_spec(), workers=default_workers())
+    meta = res["_meta"]
+    assert meta["workers"] == 1
+    assert meta["workers_env"] == "1"
+    assert meta["cpu_count"] >= 1
+    assert meta["n_legs"] == meta["ran"] + meta["cached"]
+
+
+def test_matrix_timing_records_workers_metadata():
+    m = scenario_matrix(scenarios=["steady"], duration_ms=DUR,
+                        n_devices=8, prefill_devices=2, timing=True)
+    t = m["_timing"]
+    assert t["workers"] == 1
+    assert t["cpu_count"] >= 1
+    assert "workers_env" in t
+    assert all(w >= 0 for w in t["legs"].values())
+
+
+# --------------------------------------------------- perf gate (bench)
+
+
+def _fake_sweep_cell(**kw):
+    cell = {"preset": "bench", "spec_hash": "x", "n_legs": 500,
+            "workers": 1, "cpu_count": 1, "workers_env": None,
+            "wall_s_serial": 2.0, "wall_s_parallel": 2.0,
+            "parallel_speedup": 1.0, "parallel_efficiency": 1.0,
+            "n_violations": 0, "completed_total": 10_000}
+    cell.update(kw)
+    return cell
+
+
+def _gate(result_cell, baseline_cell):
+    import perf_sim
+    agg = {"speedup_geomean": 1.0, "horizon_events_total": 100}
+    shell = {"config": {"smoke": True}, "workloads": {},
+             "aggregate": agg}
+    result = dict(shell, sweep=result_cell)
+    baseline = {"smoke": dict(shell, sweep=baseline_cell)}
+    return perf_sim.check_baseline(result, baseline)
+
+
+def test_perf_gate_fails_on_efficiency_regression():
+    fails = _gate(_fake_sweep_cell(parallel_efficiency=0.5, workers=4),
+                  _fake_sweep_cell(parallel_efficiency=1.0, workers=4))
+    assert any("parallel efficiency" in f for f in fails)
+
+
+def test_perf_gate_skips_efficiency_at_fewer_workers():
+    fails = _gate(_fake_sweep_cell(parallel_efficiency=0.5, workers=1),
+                  _fake_sweep_cell(parallel_efficiency=1.0, workers=4))
+    assert not any("parallel efficiency" in f for f in fails)
+
+
+def test_perf_gate_fails_on_deterministic_shrink():
+    fails = _gate(_fake_sweep_cell(n_legs=400, completed_total=9_000),
+                  _fake_sweep_cell())
+    assert any("legs" in f for f in fails)
+    assert any("completed" in f for f in fails)
+    fails = _gate(_fake_sweep_cell(n_violations=3), _fake_sweep_cell())
+    assert any("violations" in f for f in fails)
+
+
+def test_perf_gate_passes_on_equal_cells():
+    assert _gate(_fake_sweep_cell(), _fake_sweep_cell()) == []
