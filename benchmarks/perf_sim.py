@@ -32,9 +32,12 @@ counts, (c) the matrix parallel throughput (serial/parallel wall
 ratio — again a same-host ratio), failing on a >30% regression of any,
 (d) a per-leg floor on ``webserver/avx512/specialized`` — the leg
 whose event storm ISSUE 8 fixed — gating both its absolute speedup and
-its deterministic event count, and (e) the sweep cell: zero oracle
+its deterministic event count, (e) the sweep cell: zero oracle
 violations, no deterministic leg/completion shrink, and no
-parallel-efficiency regression at equal-or-more workers.
+parallel-efficiency regression at equal-or-more workers, and (f) the
+pinned fault grid point: zero FaultOracle violations, exact
+conservation (injected = completed + shed + expired), nonzero injected
+faults, and no shed-rate or completion regression.
 
   PYTHONPATH=src python benchmarks/run.py perf --smoke \
       --out results/BENCH_simulator.json --check-baseline BENCH_simulator.json
@@ -218,6 +221,39 @@ def run_bench(smoke: bool = False, parallel: int = 0,
         "n_violations": sum(c["n_violations"] for c in c_scen.values()),
     }
 
+    # the fault fabric: one pinned resilience grid point — the crash
+    # trace through the adaptive router at the reference 4x16 cell
+    # under the rate-3/detect-250 plan. Everything in this cell except
+    # wall_s is deterministic, so conservation and the shed rate gate
+    # sharply across hosts. (20s smoke still covers the plan's seed-2
+    # failure stream — 4 crashes — so recovery is always exercised.)
+    f_duration = 20_000.0 if smoke else 30_000.0
+    f_trace = scenario_trace("faults/crash", duration_ms=f_duration,
+                             seed=0)
+    f_res, f_wall = _time(lambda: replay_cluster(
+        f_trace, n_shards=4, fault_plan="crash-r3-d250"))
+    fs = f_res["metrics"]
+    faults_cell = {
+        "duration_ms": f_duration,
+        "n_shards": 4,
+        "policy": "cluster-adaptive",
+        "fault_plan": f_res.get("fault_plan"),
+        "fault_plan_hash": f_res.get("fault_plan_hash"),
+        "wall_s": round(f_wall, 4),
+        "injected": fs["injected"],
+        "completed": fs["completed"],
+        "shed_total": fs["shed_total"],
+        "expired_total": fs["expired_total"],
+        "leftover": fs["leftover"],
+        "faults_injected": fs["faults_injected"],
+        "shard_recoveries": fs["shard_recoveries"],
+        "drained": fs["drained"],
+        "retries": fs["retries"],
+        "itl_p99_ms": round(fs["itl_p99_ms"], 2),
+        "shed_rate": round(fs["shed_total"] / max(fs["injected"], 1), 4),
+        "n_violations": f_res["n_violations"],
+    }
+
     speedups = [c["speedup"] for c in rows.values()]
     aggregate = {
         "speedup_geomean": round(
@@ -238,7 +274,8 @@ def run_bench(smoke: bool = False, parallel: int = 0,
     }
     return {"config": {"smoke": smoke}, "workloads": rows,
             "matrix": matrix_cell, "sweep": sweep_cell,
-            "cluster": cluster_cell, "aggregate": aggregate}
+            "cluster": cluster_cell, "faults": faults_cell,
+            "aggregate": aggregate}
 
 
 def check_baseline(result: dict, baseline: dict) -> list:
@@ -352,6 +389,44 @@ def check_baseline(result: dict, baseline: dict) -> list:
                     f"cluster/{name} completed {cell['completed']} < "
                     f"baseline {b_cell['completed']} (deterministic — "
                     f"a real scheduling regression)")
+    # fault fabric: the pinned grid point is fully deterministic, so
+    # the oracle / conservation / recovery checks are absolute, and the
+    # shed rate gates as a ratio against the committed point (a
+    # baseline of zero shedding therefore tolerates zero — shedding
+    # appearing where there was none is a real degradation, not noise).
+    b_f, r_f = base.get("faults"), result.get("faults")
+    if r_f is not None:
+        if r_f.get("n_violations", 0) > 0:
+            fails.append(
+                f"fault replay reported {r_f['n_violations']} oracle "
+                f"violations (must be 0)")
+        acct = (r_f.get("completed", 0) + r_f.get("shed_total", 0)
+                + r_f.get("expired_total", 0))
+        if r_f.get("injected", 0) != acct:
+            fails.append(
+                f"fault conservation broken: injected "
+                f"{r_f.get('injected')} != completed+shed+expired "
+                f"{acct} (deterministic — requests were lost or "
+                f"double-counted)")
+        if r_f.get("faults_injected", 0) == 0:
+            fails.append(
+                "pinned fault grid point injected zero faults (the "
+                "chaos gate is gating nothing)")
+    if b_f and r_f:
+        shed_ceil = b_f.get("shed_rate", 0.0) \
+            * (1.0 + REGRESSION_TOLERANCE)
+        if r_f.get("shed_rate", 0.0) > shed_ceil + 1e-12:
+            fails.append(
+                f"fault shed rate {r_f.get('shed_rate')} > "
+                f"{shed_ceil:.4f} (baseline {b_f.get('shed_rate')} + "
+                f"{REGRESSION_TOLERANCE:.0%}; deterministic — "
+                f"degradation is shedding more than the committed "
+                f"point)")
+        if r_f.get("completed", 0) < b_f.get("completed", 0):
+            fails.append(
+                f"fault grid point completed {r_f.get('completed')} < "
+                f"baseline {b_f.get('completed')} (deterministic — "
+                f"recovery is losing requests)")
     return fails
 
 
@@ -414,6 +489,15 @@ def main(argv=None) -> int:
     print(f"{'cluster (' + str(cl['n_shards']) + ' shards)':38s} "
           f"{cl['req_per_wall_s']:.0f} req/wall-s, "
           f"{cl['n_violations']} violations")
+    ft = result.get("faults")
+    if ft is not None:
+        print(f"{'faults/' + str(ft['fault_plan']):38s} "
+              f"wall={ft['wall_s']:8.3f}s "
+              f"inj={ft['injected']} done={ft['completed']} "
+              f"shed={ft['shed_total']} exp={ft['expired_total']} "
+              f"crashes={ft['faults_injected']} "
+              f"rec={ft['shard_recoveries']} "
+              f"violations={ft['n_violations']}")
     agg = result["aggregate"]
     print(f"geomean speedup {agg['speedup_geomean']}x "
           f"(min {agg['speedup_min']}x, max {agg['speedup_max']}x); "

@@ -276,8 +276,21 @@ def run_cluster(args, cfg, model, params):
         freq=engine_freq_config(args.arch)))
     eng = ClusterEngine(cluster, args.cluster_policy, cfg=ccfg,
                         executors=executors)
+    plan = None
+    if args.fault_plan:
+        from repro.sched.faults import resolve_fault_plan
+        plan = resolve_fault_plan(args.fault_plan)
+        print(f"[serve] fault plan {plan.name!r} "
+              f"(hash {plan.plan_hash})")
     t0 = time.time()
-    m = eng.run(reqs)               # no horizon: run to completion
+    if plan is None:
+        m = eng.run(reqs)           # no horizon: run to completion
+    else:
+        # fault injection needs a finite horizon: faults stop with the
+        # arrival window, the drain tail lets recovery/retries settle
+        last_arrive = max(r.arrive_ms for r in reqs) if reqs else 0.0
+        m = eng.run(reqs, last_arrive + 60_000.0, fault_plan=plan,
+                    fault_horizon_ms=last_arrive)
     wall = time.time() - t0
     s = m.summary()
     print(f"[serve] {s['completed']}/{len(reqs)} requests in "
@@ -287,6 +300,12 @@ def run_cluster(args, cfg, model, params):
           f"itl_p50={s['itl_p50_ms']:.1f}ms "
           f"itl_p99={s['itl_p99_ms']:.1f}ms "
           f"holds={s['router_holds']}")
+    if plan is not None:
+        print(f"[serve] faults: injected={s['faults_injected']} "
+              f"recoveries={s['shard_recoveries']} "
+              f"drained={s['drained']} retries={s['retries']} "
+              f"dropped={s['dropped']} shed={s['shed_total']} "
+              f"expired={s['expired_total']}")
     for name, sh in m.shard_summaries().items():
         print(f"[serve]   {name}: routed={sh['routed']} "
               f"done={sh['completed']} f={sh['avg_freq_ghz']:.2f}GHz "
@@ -349,6 +368,10 @@ def main(argv=None):
                     help="cluster mode: registered cluster policy "
                          "(cluster-rr, cluster-queue, cluster-freq, "
                          "cluster-adaptive)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="cluster mode: registered fault plan to "
+                         "inject (crash, brownout, straggler, flaky, "
+                         "storm, ... — see repro.sched.faults)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)

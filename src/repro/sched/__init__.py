@@ -8,10 +8,15 @@ behind SLO-aware admission control; `sched/workload.py` generates
 seeded, JSON-replayable traces, `sched/replay.py` replays one trace
 differentially through every registered policy and mechanism, and
 `sched/sweep.py` compiles declarative grid specs over all of it into
-cached, cost-ordered parallel sweeps."""
-from repro.sched.cluster import (ClusterConfig, ClusterEngine,
+cached, cost-ordered parallel sweeps; `sched/faults.py` injects
+seeded, oracle-checked fault schedules into cluster replays."""
+from repro.sched.cluster import (FAULTS, ClusterConfig, ClusterEngine,
                                  ClusterMetrics, ClusterTopology, Router,
                                  ShardSpec)
+from repro.sched.faults import (FAULT_PLANS, FaultEvent, FaultPlan,
+                                check_resilience, register_fault_plan,
+                                registered_fault_plans,
+                                resolve_fault_plan)
 from repro.sched.freq import (ENGINE_FREQ_MS, KV_HANDOFF_MS,
                               FreqDomainConfig, FrequencyDomain,
                               ResidencyWindow)
@@ -43,18 +48,20 @@ __all__ = [
     "ClusterAdaptivePolicy", "ClusterConfig", "ClusterEngine",
     "ClusterFreqAwarePolicy", "ClusterMetrics", "ClusterPolicy",
     "ClusterRoundRobinPolicy", "ClusterTopology", "CohortPolicy",
-    "ENGINE_FREQ_MS", "FreqDomainConfig", "FrequencyDomain",
+    "ENGINE_FREQ_MS", "FAULTS", "FAULT_PLANS", "FaultEvent", "FaultPlan",
+    "FreqDomainConfig", "FrequencyDomain",
     "KV_HANDOFF_MS", "LoadSignals", "POLICIES", "PRESETS", "Policy",
     "Pool", "ResidencyWindow", "Router", "SCENARIOS",
     "SharedBaselinePolicy", "ShardSpec", "ShardView",
     "SpecializedPolicy", "SweepCache", "SweepSpec", "SweepSpecError",
     "Tenant", "Topology", "Trace", "TypeChangeDecision", "WorkKind",
-    "WorkloadSpec", "baseline_deltas", "leg_key", "light_penalty",
-    "make_cluster_policy", "make_policy", "matrix_spec",
+    "WorkloadSpec", "baseline_deltas", "check_resilience", "leg_key",
+    "light_penalty", "make_cluster_policy", "make_policy", "matrix_spec",
     "poisson_workload", "preset_spec", "reduce_rows",
-    "register_cluster_policy", "register_policy", "register_preset",
-    "register_cluster_scenario", "register_scenario",
-    "registered_cluster_policies", "registered_policies", "run_legs",
+    "register_cluster_policy", "register_fault_plan", "register_policy",
+    "register_preset", "register_cluster_scenario", "register_scenario",
+    "registered_cluster_policies", "registered_fault_plans",
+    "registered_policies", "resolve_fault_plan", "run_legs",
     "run_sweep", "scenario_spec", "scenario_trace", "sweep_json",
     "tidy_rows",
 ]

@@ -67,6 +67,11 @@ class Request:
     done_ms: Optional[float] = None
     last_token_ms: Optional[float] = None
     deadline: float = 0.0
+    # retry accounting (cluster tier): how many times this request has
+    # re-entered the router after a drain or a dropped response. The
+    # deadline above is ABSOLUTE and survives retries — router queueing,
+    # drains and backoff all spend the same budget.
+    attempts: int = 0
 
     @property
     def decoding(self) -> bool:
@@ -227,19 +232,35 @@ class Engine:
         self.name = name                # shard id in cluster mode
         self.oracle = None              # set per run()
         self.domains: Dict[str, FrequencyDomain] = {}   # set per run()
+        # fault-injection hooks (sched/faults.py, wired by the cluster;
+        # all inert by default). slow_factor scales every service
+        # duration while a straggler window is open; completion_filter
+        # decides whether a finishing request's response is actually
+        # delivered (False = drop fault — the request leaves the batch
+        # uncompleted and on_drop fires); on_complete observes every
+        # delivered completion (exactly-once conservation auditing).
+        self.slow_factor = 1.0
+        self.completion_filter = None   # (t, Request) -> bool
+        self.on_complete = None         # (t, Request) callback
+        self.on_drop = None             # (t, Request) callback
 
     # --------------------------------------------------- run lifecycle
 
     def begin_run(self, requests: List[Request],
                   horizon_ms: Optional[float] = None,
                   oracle: Optional[object] = None,
-                  push=None) -> None:
+                  push=None, t0: float = 0.0) -> None:
         """Reset per-run state and enqueue ``requests`` as arrivals.
 
         ``push`` is the event sink: ``None`` uses a private heap (the
         standalone ``run()`` loop); a cluster passes
         ``push(engine, t, kind, payload)`` so shard events land on the
-        shared heap, globally ordered with every other shard's."""
+        shared heap, globally ordered with every other shard's.
+
+        ``t0`` is the simulated time this incarnation starts at — 0 for
+        a normal run, the recovery time when a cluster restarts a
+        crashed shard (so the first resize window is not measured from
+        the beginning of time)."""
         cfg = self.cfg
         self.topo = self._topo0         # resizes do not leak across runs
         self.oracle = orc = oracle
@@ -264,11 +285,12 @@ class Engine:
         # resize window accumulators; the reduced-frequency window
         # (ResidencyWindow) measures the license residency the adaptive
         # policy sizes pools from
-        self._win_start = 0.0
+        self._win_start = t0
         self._win_busy = {"heavy": 0.0, "light": 0.0}
         self._win_handoffs = 0
         self._win_freq = ResidencyWindow(self.domains)
-        self._last_t = 0.0
+        self._last_t = t0
+        self.slow_factor = 1.0          # faults never leak across runs
         for r in sorted(requests, key=lambda r: r.arrive_ms):
             self._push(r.arrive_ms, "arrive", r)
 
@@ -284,6 +306,22 @@ class Engine:
         engine — the router's per-shard backlog signal."""
         return len(self._waiting) + self.n_inflight \
             + sum(len(a) for a in self._active.values())
+
+    def drain_resident(self) -> List[Request]:
+        """Crash-stop drain: remove and return every request resident
+        on this engine (EDF-waiting heap + active decode batches), in
+        EDF order. Requests inside a handoff copy ride on the event
+        heap as ``deliver`` payloads — the cluster salvages those from
+        the stale events itself — so ``n_inflight`` is simply reset
+        here and a later ``begin_run`` starts clean."""
+        out = [r for _, _, r in self._waiting]
+        self._waiting.clear()
+        for pool in self._active:
+            out.extend(self._active[pool])
+            self._active[pool] = []
+        self.n_inflight = 0
+        out.sort(key=lambda r: (r.deadline, r.rid))
+        return out
 
     def handle(self, t: float, kind: str, payload) -> None:
         """Process one popped event. The caller (standalone loop or
@@ -500,14 +538,15 @@ class Engine:
         if self.executor is not None:
             # measured wall time: drive the license state machine for
             # residency accounting but never stretch a real duration
-            dur = self.executor.prefill(r, chunk, pool, ndev)
+            dur = self.executor.prefill(r, chunk, pool, ndev) \
+                * self.slow_factor
             end = d.observe(t, dur, d.cfg.max_level, dense=True)
         else:
             # heavy section: requests/refreshes the pool's license and
             # runs through the domain (only the grant-window throttle
             # can extend it — the roofline prefill time is already the
             # licensed speed)
-            dur = model.prefill_ms(chunk, ndev)
+            dur = model.prefill_ms(chunk, ndev) * self.slow_factor
             end = d.heavy_section(t, dur)
         r.prefilled += chunk
         self._charge(pool, "heavy", end - t)
@@ -536,10 +575,11 @@ class Engine:
                 # the license is still down, so it too runs slow (on the
                 # modeled path only — with a live executor nothing is
                 # stretched).
+                hand_ms = model.handoff_ms * self.slow_factor
                 if self.executor is not None:
-                    hand_end = d.observe(end, model.handoff_ms)
+                    hand_end = d.observe(end, hand_ms)
                 else:
-                    hand_end = d.light_section(end, model.handoff_ms)
+                    hand_end = d.light_section(end, hand_ms)
                 self._charge(pool, "heavy", hand_end - end)
                 self._transfer([r], pool, target, hand_end)
                 end = hand_end
@@ -552,13 +592,14 @@ class Engine:
         d = self.domains[pool]
         if self.executor is not None:
             # measured wall time: residency accounting only
-            dur = self.executor.decode(batch, pool, ndev)
+            dur = self.executor.decode(batch, pool, ndev) \
+                * self.slow_factor
             end = d.observe(t, dur)
         else:
             # light section: a decode round inside the hysteresis window
             # after a prefill runs at the reduced frequency — the
             # trailing slowdown the specialization removes, now emergent
-            dur = model.decode_ms(len(batch), ndev)
+            dur = model.decode_ms(len(batch), ndev) * self.slow_factor
             end = d.light_section(t, dur)
         if self.oracle is not None:
             self.oracle.on_decode(t, end, pool, batch)
@@ -570,8 +611,18 @@ class Engine:
                 m.itl_ms.append(end - r.last_token_ms)
             r.last_token_ms = end
             if r.generated >= r.max_new:
-                r.done_ms = end
-                m.completed += 1
+                if self.completion_filter is not None and \
+                        not self.completion_filter(end, r):
+                    # drop fault: the response is lost at completion
+                    # time — the request leaves the batch uncompleted
+                    # and the cluster decides retry vs shed
+                    if self.on_drop is not None:
+                        self.on_drop(end, r)
+                else:
+                    r.done_ms = end
+                    m.completed += 1
+                    if self.on_complete is not None:
+                        self.on_complete(end, r)
             else:
                 still.append(r)
         active[pool] = still + active[pool][cfg.decode_batch_max:]

@@ -116,6 +116,12 @@ class FrequencyDomain:
         self.grant_at = 0.0                  # when pending becomes level
         self.revert_at: Optional[float] = None   # hysteresis expiry
         self.last_heavy_end = 0.0
+        # brownout clamp (fault injection): while t < clamp_until the
+        # domain's frequency is capped at freqs_ghz[clamp_level], as if
+        # the PCU were stuck granting a low license. Inactive by
+        # default (clamp_level 0 caps at f0 == no-op).
+        self.clamp_level = 0
+        self.clamp_until = 0.0
         # accounting (CORE_POWER.* perf counters + frequency residency)
         self.cycles_at_level: List[float] = [0.0] * n
         self.time_at_level: List[float] = [0.0] * n
@@ -159,8 +165,12 @@ class FrequencyDomain:
     def speed_ghz(self, t: float) -> float:
         self._advance(t)
         if self.pending is not None:
-            return self.cfg.freqs_ghz[self.pending] * self.cfg.throttle_factor
-        return self.cfg.freqs_ghz[self.level]
+            v = self.cfg.freqs_ghz[self.pending] * self.cfg.throttle_factor
+        else:
+            v = self.cfg.freqs_ghz[self.level]
+        if self.clamp_level > 0 and t < self.clamp_until:
+            v = min(v, self.cfg.freqs_ghz[self.clamp_level])
+        return v
 
     def next_event(self, t: float) -> Optional[float]:
         ev = []
@@ -168,7 +178,30 @@ class FrequencyDomain:
             ev.append(self.grant_at)
         if self.revert_at is not None and self.revert_at > t:
             ev.append(self.revert_at)
+        if self.clamp_level > 0 and self.clamp_until > t:
+            ev.append(self.clamp_until)
         return min(ev) if ev else None
+
+    def set_clamp(self, level: int, until: float) -> None:
+        """Brownout fault: cap this domain at ``freqs_ghz[level]`` until
+        ``until`` (absolute domain time). The cap binds only when it is
+        below the license state machine's own speed, and residency is
+        attributed to the clamped level while it binds — so the router's
+        measured-residency signal sees a browned-out shard as reduced
+        without any special-casing."""
+        if not (0 <= level < self.cfg.n_levels):
+            raise ValueError(f"clamp level {level} out of range")
+        self.clamp_level = int(level)
+        self.clamp_until = float(until)
+
+    def _acct_idx(self, now: float) -> int:
+        """Level index residency/cycles are charged to at ``now`` —
+        the license index, raised to the clamp level while a brownout
+        clamp binds."""
+        idx = self.level if self.pending is None else self.pending
+        if self.clamp_level > idx and now < self.clamp_until:
+            idx = self.clamp_level
+        return idx
 
     def execute(self, t: float, cycles: float, level: int,
                 dense: bool) -> float:
@@ -222,7 +255,7 @@ class FrequencyDomain:
             if deadline is not None and deadline - now < span:
                 span = deadline - now
             done = span * v
-            idx = self.level if self.pending is None else self.pending
+            idx = self._acct_idx(now)
             self.cycles_at_level[idx] += done
             self.time_at_level[idx] += span
             if self.pending is not None:
@@ -255,13 +288,15 @@ class FrequencyDomain:
                 self.throttled_time, self.busy_time, self.freq_time,
                 self.energy, self.transitions,
                 list(self.cycles_at_level), list(self.time_at_level),
-                len(self.events), len(self.sections))
+                len(self.events), len(self.sections),
+                self.clamp_level, self.clamp_until)
 
     def restore_state(self, snap: Tuple) -> None:
         (self.level, self.pending, self.grant_at, self.revert_at,
          self.last_heavy_end, self.throttle_cycles, self.throttled_time,
          self.busy_time, self.freq_time, self.energy, self.transitions,
-         cyc, tim, n_ev, n_sec) = snap
+         cyc, tim, n_ev, n_sec,
+         self.clamp_level, self.clamp_until) = snap
         self.cycles_at_level[:] = cyc
         self.time_at_level[:] = tim
         del self.events[n_ev:]
@@ -316,7 +351,7 @@ class FrequencyDomain:
             nxt = self.next_event(now)
             span = end - now if nxt is None else min(end - now, nxt - now)
             done = span * v_ghz * cfg.cycles_per_ghz
-            idx = self.level if self.pending is None else self.pending
+            idx = self._acct_idx(now)
             self.cycles_at_level[idx] += done
             self.time_at_level[idx] += span
             if self.pending is not None:

@@ -347,6 +347,7 @@ class ShardView:
     license_residency: float = 0.0    # last window, 0..1
     energy_rate: float = 0.0          # energy proxy per ms, last window
     reduced_now: bool = False         # any pool currently below L0
+    failed: bool = False              # detected crash-stop (faults.py)
 
 
 class ClusterPolicy:
@@ -363,10 +364,27 @@ class ClusterPolicy:
     name = "cluster-base"
     shard_policy = "specialized"
 
+    # Failure-handling knobs (sched/faults.py). A drained or dropped
+    # request re-enters the router with its remaining deadline budget
+    # after a capped exponential backoff; after ``max_attempts``
+    # dispatches it is shed (never silently lost). When
+    # ``hedge_on_brownout`` is set the router steers the EDF head away
+    # from a browned-out shard whenever a healthy shard also admits it
+    # (a placement hedge, not a duplicate dispatch — exactly-once
+    # completion is preserved). ``shed_queue_factor`` bounds the router
+    # backlog: above shed_queue_factor x total alive admit capacity the
+    # router sheds lowest-SLO-class (largest deadline window) requests
+    # first, accounted per tenant.
+    max_attempts = 3
+    retry_backoff_ms = 25.0
+    retry_backoff_cap_ms = 400.0
+    hedge_on_brownout = True
+    shed_queue_factor = 4.0
+
     def admits(self, view: ShardView) -> bool:
         """Admission control: may the router dispatch to this shard
-        now? Base rule: bounded per-shard backlog."""
-        return view.queue_depth < view.admit_limit
+        now? Base rule: alive, and bounded per-shard backlog."""
+        return (not view.failed) and view.queue_depth < view.admit_limit
 
     def place(self, views: Tuple[ShardView, ...], request
               ) -> Optional[str]:

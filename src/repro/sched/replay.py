@@ -249,25 +249,32 @@ class RouterOracle:
 
       router-edf     only the earliest-deadline queued request may
                      dispatch (strict head-of-line);
-      router-admit   a dispatch lands only on a shard whose backlog is
-                     below its admission limit, and the router never
-                     holds while some shard still admits — admission is
-                     monotone: a hold happens iff the fleet is
-                     saturated;
-      router-dup     no request is dispatched twice;
-      router-loss    every router arrival is either dispatched or still
-                     queued at end of run (nothing dropped, nothing
-                     invented);
+      router-admit   a dispatch lands only on a LIVE shard whose backlog
+                     is below its admission limit, and the router never
+                     holds while some live shard still admits —
+                     admission is monotone: a hold happens iff every
+                     live shard is saturated (detected-failed shards
+                     are out of the fleet for both sides of the check);
+      router-dup     no request is dispatched twice without an
+                     intervening requeue (drain / retry);
+      router-requeue only an in-flight (dispatched) request may
+                     requeue; only a queued request may expire or shed;
+      router-loss    at end of run the requests the oracle believes
+                     queued are exactly the router's queue (nothing
+                     dropped, nothing invented);
       deadline       the router's EDF key is the trace arrival plus the
-                     request's SLO window (router queueing spends SLO
-                     budget; it never resets it).
+                     request's SLO window (router queueing, drains and
+                     retries spend SLO budget; they never reset it).
     """
 
     def __init__(self, default_window_ms: float = 50.0):
         self.default_window_ms = default_window_ms
         self.violations: List[Dict] = []
         self.n_violations = 0
-        self._dispatched: Dict[int, str] = {}
+        # rid -> lifecycle state: queued / dispatched / expired / shed.
+        # Dispatch->requeue->dispatch cycles are legal (fault retries);
+        # everything else transitions exactly once.
+        self._state: Dict[int, str] = {}
         self._arrived = 0
 
     def _flag(self, check: str, t: float, detail: str):
@@ -280,12 +287,37 @@ class RouterOracle:
 
     def on_router_arrive(self, t: float, r: Request, deadline: float):
         self._arrived += 1
+        if r.rid in self._state:
+            self._flag("router-dup", t,
+                       f"rid={r.rid} arrived twice at the router")
+        self._state[r.rid] = "queued"
         window = self.default_window_ms if r.deadline_window_ms is None \
             else r.deadline_window_ms
         if abs(deadline - (r.arrive_ms + window)) > 1e-9:
             self._flag("deadline", t,
                        f"rid={r.rid} router deadline {deadline} != "
                        f"arrive+window {r.arrive_ms + window}")
+
+    def on_requeue(self, t: float, r: Request):
+        prev = self._state.get(r.rid, "dispatched")
+        if prev != "dispatched":
+            self._flag("router-requeue", t,
+                       f"rid={r.rid} requeued from state {prev!r}")
+        self._state[r.rid] = "queued"
+
+    def on_expire(self, t: float, r: Request):
+        prev = self._state.get(r.rid, "queued")
+        if prev != "queued":
+            self._flag("router-requeue", t,
+                       f"rid={r.rid} expired from state {prev!r}")
+        self._state[r.rid] = "expired"
+
+    def on_shed(self, t: float, r: Request):
+        prev = self._state.get(r.rid, "queued")
+        if prev != "queued":
+            self._flag("router-requeue", t,
+                       f"rid={r.rid} shed from state {prev!r}")
+        self._state[r.rid] = "shed"
 
     def on_dispatch(self, t: float, head: Request, views, target,
                     queue) -> None:
@@ -299,8 +331,8 @@ class RouterOracle:
                            f"earlier-deadline queued request")
         vmap = {v.name: v for v in views}
         if target is None:
-            admitting = [v.name for v in views
-                         if v.queue_depth < v.admit_limit]
+            admitting = [v.name for v in views if not v.failed
+                         and v.queue_depth < v.admit_limit]
             if admitting:
                 self._flag("router-admit", t,
                            f"router holds rid={head.rid} while shards "
@@ -311,34 +343,161 @@ class RouterOracle:
             self._flag("router-admit", t,
                        f"rid={head.rid} dispatched to unknown shard "
                        f"{target!r}")
+        elif v.failed:
+            self._flag("router-admit", t,
+                       f"rid={head.rid} dispatched to failed shard "
+                       f"{target!r}")
         elif v.queue_depth >= v.admit_limit:
             self._flag("router-admit", t,
                        f"rid={head.rid} dispatched to saturated shard "
                        f"{target!r} ({v.queue_depth} >= {v.admit_limit})")
-        if head.rid in self._dispatched:
+        if self._state.get(head.rid) == "dispatched":
             self._flag("router-dup", t,
-                       f"rid={head.rid} dispatched twice "
-                       f"({self._dispatched[head.rid]!r} then {target!r})")
-        self._dispatched[head.rid] = target
+                       f"rid={head.rid} dispatched twice without an "
+                       f"intervening requeue (to {target!r})")
+        self._state[head.rid] = "dispatched"
 
     def on_end(self, m, router) -> None:
         queued = len(router)
-        if len(self._dispatched) + queued != self._arrived:
+        believed = sum(1 for s in self._state.values() if s == "queued")
+        if believed != queued:
             self._flag("router-loss", m.total_ms,
-                       f"{self._arrived} arrivals != "
-                       f"{len(self._dispatched)} dispatched + "
-                       f"{queued} still queued")
+                       f"{believed} requests in queued state != "
+                       f"{queued} actually queued at end of run")
+
+
+class FaultOracle:
+    """Fault-model contract for cluster replays under injection
+    (``repro.sched.faults``). Hooks fire from the cluster engine's
+    fault machinery; violations collect like the other oracles'.
+
+      fault-conservation  every injected request reaches EXACTLY ONE
+                          terminal state (completed / shed / expired),
+                          and the non-terminal residue matches the
+                          engine's ``leftover`` count — nothing lost in
+                          a drain, nothing completed twice, nothing
+                          double-shed;
+      fault-dup-complete  no request completes more than once
+                          (exactly-once across retries and drops);
+      fault-dead-dispatch no dispatch lands on a shard between failure
+                          detection and recovery;
+      fault-retry-cap     a request never retries at or beyond the
+                          policy's ``max_attempts``;
+      fault-drain-order   a failure drain requeues the dead shard's
+                          residents in EDF order (deadline, rid).
+    """
+
+    def __init__(self, max_attempts: int = 3):
+        self.max_attempts = max_attempts
+        self.violations: List[Dict] = []
+        self.n_violations = 0
+        self.active = False
+        self._terminal: Dict[int, str] = {}   # rid -> terminal state
+        self._down: set = set()               # detected-failed shards
+        self.counts: Dict[str, int] = {
+            "faults": 0, "detects": 0, "recoveries": 0, "drained": 0,
+            "retries": 0, "drops": 0, "completed": 0, "shed": 0,
+            "expired": 0}
+
+    def _flag(self, check: str, t: float, detail: str):
+        self.n_violations += 1
+        if len(self.violations) < MAX_RECORDED_VIOLATIONS:
+            self.violations.append(
+                {"check": check, "t_ms": round(t, 3), "detail": detail})
+
+    # ----------------------------------------------------------- hooks
+
+    def on_run_start(self, plan, max_attempts: int):
+        self.active = True
+        self.max_attempts = max_attempts
+
+    def _terminate(self, t: float, r, state: str):
+        prev = self._terminal.get(r.rid)
+        if prev is not None:
+            self._flag("fault-conservation", t,
+                       f"rid={r.rid} reached terminal state {state!r} "
+                       f"after already being {prev!r}")
+            return
+        self._terminal[r.rid] = state
+        self.counts[state] += 1
+
+    def on_fault(self, t: float, ev):
+        self.active = True
+        self.counts["faults"] += 1
+
+    def on_detect(self, t: float, shard: str):
+        self._down.add(shard)
+        self.counts["detects"] += 1
+
+    def on_recover(self, t: float, shard: str):
+        self._down.discard(shard)
+        self.counts["recoveries"] += 1
+
+    def on_drain(self, t: float, shard: str, reqs) -> None:
+        self.counts["drained"] += len(reqs)
+        keys = [(r.deadline, r.rid) for r in reqs]
+        if keys != sorted(keys):
+            self._flag("fault-drain-order", t,
+                       f"shard {shard!r} drain requeued out of EDF "
+                       f"order: {keys[:6]}...")
+
+    def on_dispatch(self, t: float, r, shard: str):
+        if shard in self._down:
+            self._flag("fault-dead-dispatch", t,
+                       f"rid={r.rid} dispatched to shard {shard!r} "
+                       f"between detection and recovery")
+
+    def on_retry(self, t: float, r):
+        self.counts["retries"] += 1
+        if r.attempts >= self.max_attempts:
+            self._flag("fault-retry-cap", t,
+                       f"rid={r.rid} retrying with attempts="
+                       f"{r.attempts} >= cap {self.max_attempts}")
+        if r.rid in self._terminal:
+            self._flag("fault-conservation", t,
+                       f"rid={r.rid} retried after terminal state "
+                       f"{self._terminal[r.rid]!r}")
+
+    def on_drop(self, t: float, r):
+        self.counts["drops"] += 1
+
+    def on_complete(self, t: float, r):
+        if self._terminal.get(r.rid) == "completed":
+            self._flag("fault-dup-complete", t,
+                       f"rid={r.rid} completed twice")
+            return
+        self._terminate(t, r, "completed")
+
+    def on_shed(self, t: float, r, reason: str):
+        self._terminate(t, r, "shed")
+
+    def on_expire(self, t: float, r):
+        self._terminate(t, r, "expired")
+
+    def on_end(self, m) -> None:
+        if not self.active:
+            return
+        residue = m.injected - len(self._terminal)
+        if residue != m.leftover:
+            self._flag("fault-conservation", m.total_ms,
+                       f"{m.injected} injected - {len(self._terminal)} "
+                       f"terminal = {residue} != engine leftover "
+                       f"{m.leftover}")
 
 
 class ClusterOracle:
-    """One :class:`EngineOracle` per shard plus a :class:`RouterOracle`,
-    aggregated: the full multi-node audit — per-shard EDF order, work
-    conservation, the three frequency invariants, and the router's
-    admission contract."""
+    """One :class:`EngineOracle` per shard plus a :class:`RouterOracle`
+    and a :class:`FaultOracle`, aggregated: the full multi-node audit —
+    per-shard EDF order, work conservation, the three frequency
+    invariants, the router's admission contract, and (under injection)
+    the fault model's exactly-once / drain / retry contract."""
 
     def __init__(self, default_window_ms: float = 50.0):
         self.router = RouterOracle(default_window_ms)
+        self.faults = FaultOracle()
         self.shards: Dict[str, EngineOracle] = {}
+        # closed per-incarnation oracles of crashed shards, "name#k"
+        self._archived: Dict[str, EngineOracle] = {}
 
     def shard(self, name: str) -> EngineOracle:
         orc = self.shards.get(name)
@@ -346,22 +505,40 @@ class ClusterOracle:
             orc = self.shards[name] = EngineOracle()
         return orc
 
+    def restart_shard(self, name: str) -> EngineOracle:
+        """A shard recovered from a crash: archive the dead
+        incarnation's oracle (its invariants were closed by the
+        crash-time ``finish()``) and bind a fresh one."""
+        old = self.shards.pop(name, None)
+        if old is not None:
+            k = sum(1 for key in self._archived
+                    if key.split("#")[0] == name)
+            self._archived[f"{name}#{k}"] = old
+        return self.shard(name)
+
     def on_end(self, m, router) -> None:
-        # shard oracles close in Engine.finish(); only the router's
-        # end-of-run conservation check runs here
+        # shard oracles close in Engine.finish(); the router's and
+        # fault model's end-of-run conservation checks run here
         self.router.on_end(m, router)
+        self.faults.on_end(m)
 
     @property
     def n_violations(self) -> int:
-        return self.router.n_violations \
-            + sum(o.n_violations for o in self.shards.values())
+        return self.router.n_violations + self.faults.n_violations \
+            + sum(o.n_violations for o in self.shards.values()) \
+            + sum(o.n_violations for o in self._archived.values())
 
     @property
     def violations(self) -> List[Dict]:
         out = [{**v, "shard": "router"} for v in self.router.violations]
+        out.extend({**v, "shard": "faults"}
+                   for v in self.faults.violations)
         for name in sorted(self.shards):
             out.extend({**v, "shard": name}
                        for v in self.shards[name].violations)
+        for name in sorted(self._archived):
+            out.extend({**v, "shard": name}
+                       for v in self._archived[name].violations)
         return out[:MAX_RECORDED_VIOLATIONS]
 
 
@@ -440,18 +617,29 @@ def replay_cluster(trace: Trace, cluster_policy: str = "cluster-adaptive",
                    cfg: Optional[ClusterConfig] = None,
                    cluster: Optional[ClusterTopology] = None,
                    horizon_ms: Optional[float] = None,
-                   drain_ms: float = 20_000.0) -> Dict:
+                   drain_ms: float = 20_000.0,
+                   fault_plan=None) -> Dict:
     """Replay one trace through an N-shard cluster under one registered
     cluster policy, with the full multi-node oracle attached (per-shard
-    engine invariants + router contract). The default layout is
-    ``ClusterTopology.homogeneous`` with each shard's engine policy
-    taken from the cluster policy's ``shard_policy`` attribute; pass an
-    explicit ``cluster`` to override."""
+    engine invariants + router contract + fault model). The default
+    layout is ``ClusterTopology.homogeneous`` with each shard's engine
+    policy taken from the cluster policy's ``shard_policy`` attribute;
+    pass an explicit ``cluster`` to override.
+
+    ``fault_plan`` (a name, dict or ``FaultPlan``) runs the replay
+    under deterministic fault injection; ``None`` falls back to the
+    trace's own ``meta["fault_plan"]`` (the ``faults/*`` scenarios
+    carry one), and plans expand over the trace duration only, so the
+    drain window lets every recovery and retry settle."""
     if cluster is None:
         shard_policy = make_cluster_policy(cluster_policy).shard_policy
         cluster = ClusterTopology.homogeneous(
             n_shards, devices_per_shard, prefill_devices,
             policy=shard_policy)
+    from repro.sched.faults import resolve_fault_plan
+    plan = resolve_fault_plan(
+        fault_plan if fault_plan is not None
+        else trace.meta.get("fault_plan"))
     cfg = cfg or ClusterConfig()
     oracle = ClusterOracle(cfg.serve.deadline_window_ms)
     eng = ClusterEngine(cluster, cluster_policy, model or REPLAY_MODEL,
@@ -459,10 +647,11 @@ def replay_cluster(trace: Trace, cluster_policy: str = "cluster-adaptive",
     m = eng.run(trace.to_engine_requests(),
                 trace.duration_ms + drain_ms if horizon_ms is None
                 else horizon_ms,
-                oracle=oracle)
+                oracle=oracle, fault_plan=plan,
+                fault_horizon_ms=trace.duration_ms)
     s = m.summary()
     s["itl_spread_ms"] = s["itl_p99_ms"] - s["itl_p50_ms"]
-    return {
+    out = {
         "mechanism": "cluster",
         "policy": cluster_policy,
         "cluster": cluster.to_dict(),
@@ -471,6 +660,11 @@ def replay_cluster(trace: Trace, cluster_policy: str = "cluster-adaptive",
         "n_violations": oracle.n_violations,
         "violations": oracle.violations,
     }
+    if plan is not None:
+        out["fault_plan"] = plan.name
+        out["fault_plan_hash"] = plan.plan_hash
+        out["fault_counts"] = dict(oracle.faults.counts)
+    return out
 
 
 # --------------------------------------------------------------- matrix
@@ -509,6 +703,18 @@ def _shutdown_pool():
     global _POOL, _POOL_SIZE
     if _POOL is not None:
         _POOL.shutdown()
+        _POOL, _POOL_SIZE = None, 0
+
+
+def _kill_pool():
+    """Forcibly tear the pool down — the leg-timeout path. A clean
+    ``shutdown()`` would join a hung worker forever, so terminate the
+    worker processes first, then reap the executor without waiting."""
+    global _POOL, _POOL_SIZE
+    if _POOL is not None:
+        for p in list(getattr(_POOL, "_processes", {}).values()):
+            p.terminate()
+        _POOL.shutdown(wait=False, cancel_futures=True)
         _POOL, _POOL_SIZE = None, 0
 
 

@@ -72,7 +72,8 @@ _LEG_FIELDS: Dict[str, Tuple[str, ...]] = {
                                 "freq"),
     "simulator": _COMMON_FIELDS + ("policy", "n_cores", "n_avx", "isa"),
     "cluster": _COMMON_FIELDS + ("policy", "n_shards",
-                                 "devices_per_shard", "prefill_devices"),
+                                 "devices_per_shard", "prefill_devices",
+                                 "fault_plan"),
 }
 _LEG_DEFAULTS: Dict[str, Dict] = {
     "engine": {"policy": "specialized", "n_devices": 16,
@@ -80,7 +81,8 @@ _LEG_DEFAULTS: Dict[str, Dict] = {
     "simulator": {"policy": "specialized", "n_cores": 12, "n_avx": 4,
                   "isa": "avx512"},
     "cluster": {"policy": "cluster-adaptive", "n_shards": 4,
-                "devices_per_shard": 16, "prefill_devices": 4},
+                "devices_per_shard": 16, "prefill_devices": 4,
+                "fault_plan": None},
 }
 _SIM_POLICIES = ("shared", "specialized")
 _FREQ_FIELDS = tuple(f.name for f in fields(FreqDomainConfig))
@@ -240,6 +242,15 @@ def _normalize_leg(raw: Dict, default_seed: int) -> Dict:
         raise SweepSpecError(
             f"unregistered cluster policy {pol!r}; registered: "
             f"{list(registered_cluster_policies())}")
+    if mech == "cluster" and leg["fault_plan"] is not None:
+        from repro.sched.faults import resolve_fault_plan
+        try:
+            resolve_fault_plan(leg["fault_plan"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise SweepSpecError(
+                f"bad fault_plan {leg['fault_plan']!r}: {e}") from None
+        if isinstance(leg["fault_plan"], dict):
+            leg["fault_plan"] = dict(sorted(leg["fault_plan"].items()))
     if mech == "engine" and leg["freq"] is not None:
         bad = set(leg["freq"]) - set(_FREQ_FIELDS)
         if bad:
@@ -296,10 +307,13 @@ def run_leg(leg: Dict) -> Dict:
                              prefill_devices=leg["prefill_devices"],
                              cfg=_leg_serve_config(leg))
     if mech == "cluster":
+        # an explicit leg fault_plan wins; None falls back to the
+        # trace's own meta plan (the faults/* scenarios carry one)
         return replay_cluster(trace, leg["policy"],
                               n_shards=leg["n_shards"],
                               devices_per_shard=leg["devices_per_shard"],
-                              prefill_devices=leg["prefill_devices"])
+                              prefill_devices=leg["prefill_devices"],
+                              fault_plan=leg["fault_plan"])
     from repro.core.experiments import run_trace_sim
     return run_trace_sim(trace, leg["policy"] == "specialized",
                          n_cores=leg["n_cores"], n_avx=leg["n_avx"],
@@ -309,6 +323,18 @@ def run_leg(leg: Dict) -> Dict:
 def _run_leg_timed(leg: Dict) -> Tuple[Dict, float]:
     t0 = time.perf_counter()
     return run_leg(leg), time.perf_counter() - t0
+
+
+# Worker-side indirection: the pool submits `_leg_entry`, which calls
+# whatever `_leg_runner` is bound to *in the worker process*. Fork-
+# started workers inherit the parent's module state, so a test can
+# monkeypatch `sweep._leg_runner` (after shutting the old pool down)
+# to plant hangs or failures without the patch needing to pickle.
+_leg_runner = _run_leg_timed
+
+
+def _leg_entry(leg: Dict) -> Tuple[Dict, float]:
+    return _leg_runner(leg)
 
 
 # ------------------------------------------------------------ the cache
@@ -360,6 +386,7 @@ def default_workers() -> int:
 
 def run_legs(legs: Sequence[Dict], *, workers: int = 1,
              cache: Optional[SweepCache] = None,
+             leg_timeout_s: Optional[float] = None,
              on_result: Optional[Callable[[int, Dict, Dict], None]]
              = None) -> Tuple[List[Dict], Dict]:
     """Execute ``legs``, returning ``(results_in_input_order, stats)``.
@@ -372,15 +399,26 @@ def run_legs(legs: Sequence[Dict], *, workers: int = 1,
     ``on_result(index, leg, result)`` immediately, no end-of-sweep
     barrier). ``workers <= 1`` runs inline, same ordering.
 
+    ``leg_timeout_s`` (parallel path only — an inline leg cannot be
+    preempted) bounds each leg's wall clock from the moment it occupies
+    a worker slot: at most ``workers`` legs are outstanding at once, so
+    the submit time IS the start time. A leg that blows its budget
+    poisons the whole pool — the pool is killed (hung worker included),
+    innocent in-flight legs resubmit at no charge, and the timed-out
+    leg gets ONE retry on the fresh pool before being recorded in
+    ``stats["failed_legs"]`` with a ``None`` result. Failed legs are
+    never written to the cache.
+
     ``stats`` records workers / cpu_count / the ``REPRO_SWEEP_WORKERS``
-    override / cache hit counts / wall seconds / per-leg walls, and is
-    the only part of a sweep result that is not a pure function of
-    spec + seed."""
-    from repro.sched.replay import (_leg_trace, _worker_pool,
-                                    pool_failsafe)
+    override / cache hit counts / wall seconds / per-leg walls /
+    failed legs, and is the only part of a sweep result that is not a
+    pure function of spec + seed."""
+    from repro.sched.replay import (_kill_pool, _leg_trace,
+                                    _worker_pool, pool_failsafe)
     t0 = time.perf_counter()
     results: List[Optional[Dict]] = [None] * len(legs)
     walls: Dict[str, float] = {}
+    failed: List[str] = []
     cached = 0
     pending: List[Tuple[int, Dict]] = []
     for i, leg in enumerate(legs):
@@ -408,15 +446,54 @@ def run_legs(legs: Sequence[Dict], *, workers: int = 1,
         # inherit every frozen trace, zero pickling per leg
         for _, leg in pending:
             _leg_trace(leg["scenario"], leg["duration_ms"], leg["seed"])
-        from concurrent.futures import as_completed
-        pool = _worker_pool(workers)
+        from concurrent.futures import FIRST_COMPLETED, wait
+        waiting = list(pending)          # ordered longest-first
+        timeouts: Dict[str, int] = {}    # leg key -> timed-out count
+        running: Dict = {}               # future -> (i, leg, t_start)
         with pool_failsafe():
-            futs = {pool.submit(_run_leg_timed, leg): (i, leg)
-                    for i, leg in pending}
-            for fut in as_completed(futs):
-                i, leg = futs[fut]
-                result, wall = fut.result()
-                _finish(i, leg, result, wall)
+            pool = _worker_pool(workers)
+            while waiting or running:
+                # keep at most `workers` legs outstanding so every
+                # submitted leg holds a slot and its clock is honest
+                while waiting and len(running) < workers:
+                    i, leg = waiting.pop(0)
+                    fut = pool.submit(_leg_entry, leg)
+                    running[fut] = (i, leg, time.monotonic())
+                timeout = None
+                if leg_timeout_s is not None:
+                    deadline = min(ts + leg_timeout_s
+                                   for _, _, ts in running.values())
+                    timeout = max(0.0, deadline - time.monotonic())
+                done, _ = wait(running, timeout=timeout,
+                               return_when=FIRST_COMPLETED)
+                for fut in done:
+                    i, leg, ts = running.pop(fut)
+                    result, wall = fut.result()
+                    _finish(i, leg, result, wall)
+                if leg_timeout_s is None:
+                    continue
+                now = time.monotonic()
+                over = [fut for fut, (_, _, ts) in running.items()
+                        if now - ts >= leg_timeout_s]
+                if not over:
+                    continue
+                # a hung worker poisons the pool: kill it outright
+                # (shutdown would join the hung process), resubmit the
+                # innocent in-flight legs at no charge, and give each
+                # timed-out leg one retry on the fresh pool
+                for fut in over:
+                    i, leg, ts = running.pop(fut)
+                    n = timeouts[leg["key"]] = \
+                        timeouts.get(leg["key"], 0) + 1
+                    if n <= 1:
+                        waiting.insert(0, (i, leg))
+                    else:
+                        failed.append(leg["key"])
+                victims = sorted(running.values(), key=lambda v: v[0])
+                running.clear()
+                waiting[:0] = [(i, leg) for i, leg, _ in victims]
+                _kill_pool()
+                pool = _worker_pool(workers)
     else:
         for i, leg in pending:
             result, wall = _run_leg_timed(leg)
@@ -428,6 +505,7 @@ def run_legs(legs: Sequence[Dict], *, workers: int = 1,
         "n_legs": len(legs),
         "cached": cached,
         "ran": len(pending),
+        "failed_legs": sorted(failed),
         "wall_s": round(time.perf_counter() - t0, 4),
         "leg_walls": walls,
     }
@@ -445,6 +523,12 @@ _ENGINE_METRICS = ("completed", "throughput_tok_s", "itl_p50_ms",
 _SIM_METRICS = ("completed", "latency_p50_us", "latency_p99_us",
                 "avg_freq_ghz", "license_residency", "freq_transitions",
                 "energy_proxy", "migrations")
+# Fault/recovery accounting lifted from cluster summaries — the
+# resilience table columns (repro.sched.faults.resilience_rows).
+_CLUSTER_FAULT_METRICS = ("injected", "shed_total", "expired_total",
+                          "faults_injected", "shard_recoveries",
+                          "drained", "retries", "dropped",
+                          "brownout_hedges", "leftover")
 
 
 def tidy_rows(legs: Sequence[Dict], results: Sequence[Dict]
@@ -452,13 +536,19 @@ def tidy_rows(legs: Sequence[Dict], results: Sequence[Dict]
     """One flat dict per leg: the leg's axis coordinates (freq
     overrides flattened to ``freq.<field>`` columns) + the mechanism's
     headline metrics + ``n_violations``. The tidy table every
-    downstream consumer (benchmarks, figures, reductions) reads."""
+    downstream consumer (benchmarks, figures, reductions) reads.
+    A ``None`` result (a leg that failed its wall-clock budget) keeps
+    its coordinate row with ``failed: True`` — never silently
+    dropped."""
     rows = []
     for leg, res in zip(legs, results):
         row = {k: v for k, v in leg.items() if k != "freq"}
         for k, v in (leg.get("freq") or {}).items():
             row[f"freq.{k}"] = v
-        if leg["mechanism"] == "simulator":
+        if res is None:
+            row["failed"] = True
+            row["n_violations"] = 0
+        elif leg["mechanism"] == "simulator":
             for k in _SIM_METRICS:
                 row[k] = res[k]
             row["itl_spread_us"] = res["latency_p99_us"] \
@@ -471,6 +561,13 @@ def tidy_rows(legs: Sequence[Dict], results: Sequence[Dict]
                     row[k] = m[k]
             if leg["mechanism"] == "cluster":
                 row["router_holds"] = m.get("router_holds", 0)
+                for k in _CLUSTER_FAULT_METRICS:
+                    if k in m:
+                        row[k] = m[k]
+                # The *effective* plan: an explicit leg axis wins, else
+                # the trace meta's plan — replay reports what it ran.
+                if res.get("fault_plan") is not None:
+                    row["fault_plan"] = res["fault_plan"]
             row["n_violations"] = res["n_violations"]
         rows.append(row)
     return rows
@@ -487,11 +584,12 @@ def baseline_deltas(rows: Sequence[Dict],
     base: Dict[Tuple, Dict] = {}
     for r in rows:
         if r["policy"] == baseline_policy \
-                and r["mechanism"] in ("engine", "simulator"):
+                and r["mechanism"] in ("engine", "simulator") \
+                and not r.get("failed"):
             base[_base_coords(r, r["mechanism"])] = r
     out = []
     for r in rows:
-        if r["policy"] == baseline_policy:
+        if r["policy"] == baseline_policy or r.get("failed"):
             continue
         mech = "engine" if r["mechanism"] == "cluster" \
             else r["mechanism"]
@@ -561,17 +659,21 @@ def reduce_rows(rows: Sequence[Dict], by: Sequence[str]) -> List[Dict]:
 
 
 def run_sweep(spec: SweepSpec, *, workers: int = 1,
-              cache_dir=None, seed: Optional[int] = None) -> Dict:
+              cache_dir=None, seed: Optional[int] = None,
+              leg_timeout_s: Optional[float] = None) -> Dict:
     """Compile and execute a sweep. Everything in the returned dict
     except ``_meta`` is a pure function of ``spec`` + ``seed``: legs
     compile deterministically, each leg is a pure function of its
     coordinates, and rows/deltas keep leg order — so a resumed sweep
-    (warm cache) serializes byte-identically to a cold one."""
+    (warm cache) serializes byte-identically to a cold one. (A leg
+    failed by ``leg_timeout_s`` is the one exception: its row carries
+    ``failed: True`` and its key lands in ``_meta["failed_legs"]``.)"""
     if seed is not None and seed != spec.seed:
         spec = replace(spec, seed=seed)
     legs = spec.legs()
     cache = SweepCache(cache_dir) if cache_dir else None
-    results, stats = run_legs(legs, workers=workers, cache=cache)
+    results, stats = run_legs(legs, workers=workers, cache=cache,
+                              leg_timeout_s=leg_timeout_s)
     rows = tidy_rows(legs, results)
     return {
         "spec": spec.to_dict(),
@@ -635,12 +737,15 @@ def register_preset(name: str, factory: Callable[[], SweepSpec]):
     return factory
 
 
-def preset_spec(name: str) -> SweepSpec:
+def preset_spec(name: str, *, seed: Optional[int] = None) -> SweepSpec:
     try:
-        return PRESETS[name]()
+        spec = PRESETS[name]()
     except KeyError:
         raise SweepSpecError(f"unknown preset {name!r}; registered: "
                              f"{sorted(PRESETS)}") from None
+    if seed is not None and seed != spec.seed:
+        spec = replace(spec, seed=seed)
+    return spec
 
 
 _MATRIX_SCENARIOS = ("bursty", "diurnal", "heavy_tail", "multi_tenant",
@@ -712,15 +817,56 @@ register_preset("freq-hysteresis", lambda: SweepSpec(
                        {"grant_delay": 0.1}, {"grant_delay": 2.0}),
               "seed": (0, 1, 2)}),)))
 
-# Cluster-shape sweep: shard-count scaling of the fleet scenarios.
+# Cluster-shape sweep: shard-count scaling of the fleet scenarios
+# (the no-fault family — the faults/* scenarios have their own preset).
 register_preset("cluster-scaling", lambda: SweepSpec(
     name="cluster-scaling",
     grids=(AxisGrid(
         base={"mechanism": "cluster", "duration_ms": 20_000.0},
-        axes={"scenario": tuple(sorted(CLUSTER_SCENARIOS)),
+        axes={"scenario": tuple(s for s in sorted(CLUSTER_SCENARIOS)
+                                if not s.startswith("faults/")),
               "policy": ("cluster-rr", "cluster-freq",
                          "cluster-adaptive"),
               "n_shards": (1, 2, 4, 8)}),)))
+
+
+# Chaos sweeps: the faults/* scenario family (each trace carries its
+# registered FaultPlan) under both cluster policies, plus the
+# failure-rate x detection-latency crash grid on the crash trace with
+# an all-zero "none" plan as the no-fault control leg (same machinery,
+# zero injected faults — the honest degradation baseline).
+def _faults_spec(smoke: bool) -> SweepSpec:
+    # Both tiers keep the reference 4x16 cell: the faults/* arrival
+    # rates saturate a smaller cell, which would turn the exact
+    # conservation identity (injected == completed + shed + expired,
+    # leftover 0) into a backlog statement. Smoke trims duration only —
+    # 20s still covers the seed-0 crash stream's first failure
+    # (s2 @ 19013ms), so the recovery path stays exercised.
+    dur = 20_000.0 if smoke else 30_000.0
+    base = {"mechanism": "cluster", "duration_ms": dur,
+            "n_shards": 4, "devices_per_shard": 16,
+            "prefill_devices": 4}
+    return SweepSpec(
+        name="faults-smoke" if smoke else "faults",
+        grids=(
+            AxisGrid(
+                base=dict(base),
+                axes={"scenario": tuple(
+                          s for s in sorted(CLUSTER_SCENARIOS)
+                          if s.startswith("faults/")),
+                      "policy": ("cluster-rr", "cluster-adaptive")}),
+            AxisGrid(
+                base={**base, "scenario": "faults/crash",
+                      "policy": "cluster-adaptive"},
+                axes={"fault_plan": ("none",
+                                     "crash-r1-d250", "crash-r1-d1000",
+                                     "crash-r3-d250",
+                                     "crash-r3-d1000")}),
+        ))
+
+
+register_preset("faults", lambda: _faults_spec(False))
+register_preset("faults-smoke", lambda: _faults_spec(True))
 
 
 # ------------------------------------------------------------------ CLI
@@ -773,6 +919,12 @@ def main(argv=None) -> int:
                     help="worker processes (bare --parallel = "
                          "CPU-aware default, honoring "
                          "REPRO_SWEEP_WORKERS; 0/1 = serial)")
+    ap.add_argument("--leg-timeout", type=float, default=None,
+                    metavar="SEC",
+                    help="per-leg wall-clock timeout (parallel runs "
+                         "only); a timed-out leg gets one retry on a "
+                         "fresh worker before it is recorded in "
+                         "failed_legs")
     ap.add_argument("--cache-dir", type=Path, default=None,
                     help="on-disk leg result cache; an interrupted or "
                          "incremental sweep resumes here by skipping "
@@ -807,8 +959,12 @@ def main(argv=None) -> int:
             print(f"  ... {len(legs) - 20} more")
         return 0
     workers = dw() if args.parallel < 0 else max(1, args.parallel)
-    result = run_sweep(spec, workers=workers, cache_dir=args.cache_dir)
+    result = run_sweep(spec, workers=workers, cache_dir=args.cache_dir,
+                       leg_timeout_s=args.leg_timeout)
     meta = result["_meta"]
+    if meta.get("failed_legs"):
+        print(f"FAILED LEGS ({len(meta['failed_legs'])}): "
+              f"{', '.join(meta['failed_legs'])}")
     if args.table:
         _print_table(result)
     print(f"sweep {spec.name} ({spec.spec_hash}): {result['n_legs']} "
@@ -826,6 +982,8 @@ def main(argv=None) -> int:
         return 1
     if result["n_violations"]:
         print(f"ORACLE VIOLATIONS: {result['n_violations']}")
+        return 1
+    if meta.get("failed_legs"):
         return 1
     return 0
 

@@ -215,6 +215,11 @@ class WorkloadSpec:
     # defaults in core.workloads. Carried into Trace.meta so the OS
     # simulator legs replay a model-shaped duty cycle.
     sim_work: Optional[Dict] = None
+    # registered fault-plan name (repro.sched.faults.FAULT_PLANS);
+    # carried into Trace.meta so cluster replays of this workload run
+    # under injection by default. None (the default) is OMITTED from
+    # to_dict/meta — existing spec hashes and trace bytes are untouched.
+    fault_plan: Optional[str] = None
 
     def generate(self, *, duration_ms: Optional[float] = None,
                  seed: Optional[int] = None) -> "Trace":
@@ -237,10 +242,12 @@ class WorkloadSpec:
                 "duration_ms": dur, "spec": self.to_dict()}
         if self.sim_work:
             meta["sim_work"] = dict(self.sim_work)
+        if self.fault_plan:
+            meta["fault_plan"] = self.fault_plan
         return Trace(meta=meta, requests=reqs)
 
     def to_dict(self) -> Dict:
-        return {
+        out = {
             "name": self.name,
             "arrival": _tag(self.arrival, _ARRIVALS),
             "prompt_lens": _tag(self.prompt_lens, _LENGTHS),
@@ -250,6 +257,9 @@ class WorkloadSpec:
             "seed": self.seed,
             "sim_work": dict(self.sim_work) if self.sim_work else None,
         }
+        if self.fault_plan:
+            out["fault_plan"] = self.fault_plan
+        return out
 
     @staticmethod
     def from_dict(d: Dict) -> "WorkloadSpec":
@@ -262,6 +272,7 @@ class WorkloadSpec:
             duration_ms=d["duration_ms"],
             seed=d["seed"],
             sim_work=d.get("sim_work") or None,
+            fault_plan=d.get("fault_plan") or None,
         )
 
 
@@ -427,6 +438,56 @@ register_cluster_scenario("fleet_mixed", lambda: WorkloadSpec(
     tenants=(Tenant("interactive", weight=0.5, deadline_window_ms=20.0),
              Tenant("standard", weight=0.3, deadline_window_ms=50.0),
              Tenant("batch", weight=0.2, deadline_window_ms=500.0))))
+
+
+# Fault-injection scenarios (repro.sched.faults): each pairs a fleet
+# workload with a registered FaultPlan, carried in Trace.meta so
+# `replay_cluster` (and sweep cluster legs) run it under injection by
+# default. The tenants give the router's graceful-degradation shedding
+# a real SLO-class ladder to walk (batch sheds first). Windows are
+# sized against the reference cell's ~6s end-to-end latency: a drained
+# interactive request still has budget to retry and complete on a
+# survivor, while a crash-length pile-up does push past the windows —
+# expiry and shedding stay observable, not inevitable.
+
+_FAULT_TENANTS = (
+    Tenant("interactive", weight=0.5, deadline_window_ms=15_000.0),
+    Tenant("standard", weight=0.3, deadline_window_ms=30_000.0),
+    Tenant("batch", weight=0.2, deadline_window_ms=120_000.0))
+
+register_cluster_scenario("faults/crash", lambda: WorkloadSpec(
+    name="faults/crash",
+    arrival=PoissonArrivals(rate_per_s=10.0),
+    tenants=_FAULT_TENANTS,
+    fault_plan="crash"))
+
+register_cluster_scenario("faults/brownout", lambda: WorkloadSpec(
+    name="faults/brownout",
+    arrival=MMPPArrivals(rate_on_per_s=24.0, rate_off_per_s=2.0,
+                         mean_on_ms=1_500.0, mean_off_ms=2_500.0),
+    tenants=_FAULT_TENANTS,
+    fault_plan="brownout"))
+
+register_cluster_scenario("faults/straggler", lambda: WorkloadSpec(
+    name="faults/straggler",
+    arrival=PoissonArrivals(rate_per_s=10.0),
+    tenants=_FAULT_TENANTS,
+    fault_plan="straggler"))
+
+register_cluster_scenario("faults/flaky", lambda: WorkloadSpec(
+    name="faults/flaky",
+    arrival=PoissonArrivals(rate_per_s=10.0),
+    tenants=_FAULT_TENANTS,
+    fault_plan="flaky"))
+
+register_cluster_scenario("faults/storm", lambda: WorkloadSpec(
+    name="faults/storm",
+    arrival=DiurnalArrivals(base_rate_per_s=9.0, amplitude=0.6,
+                            period_ms=15_000.0),
+    prompt_lens=LognormalLen(median=1_600.0, sigma=0.6, lo=256,
+                             hi=8_192),
+    tenants=_FAULT_TENANTS,
+    fault_plan="storm"))
 
 
 def scenario_spec(name: str) -> WorkloadSpec:

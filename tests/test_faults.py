@@ -1,0 +1,508 @@
+"""Fault-injection fabric + failure-aware routing (repro.sched.faults).
+
+Gates:
+  * ``FaultPlan`` is a canonical artifact: to_dict/from_dict round-trip
+    exactly, unknown keys and invalid rates are rejected, the same
+    seed expands to a byte-identical fault event stream, different
+    seeds differ, crash windows never overlap and every failure
+    carries its paired recovery;
+  * the ``FaultOracle`` actually catches planted violations (negative
+    tests: duplicate completion, dispatch-to-dead-shard, over-cap
+    retry, out-of-EDF drain, a request lost on drain), mirroring the
+    RouterOracle negative style;
+  * recovery end-to-end: a mid-trace ``shard_fail`` drains the dead
+    shard's requests back through the router and they complete on the
+    survivors, with exact conservation (injected = completed + shed +
+    expired) and zero oracle violations; fault-grid tail latency stays
+    within 2x the no-fault control;
+  * graceful degradation sheds ONLY the lowest SLO class, per-tenant
+    accounted, never silent; router holds expire at deadline instead
+    of starving;
+  * the sweep integration: ``fault_plan`` is a leg axis, serial and
+    parallel chaos sweeps are byte-identical, a timed-out leg is
+    retried once then recorded in ``failed_legs`` and never cached.
+"""
+import json
+import time
+
+import pytest
+
+from repro.sched.cluster import (ClusterConfig, ClusterEngine,
+                                 ClusterTopology, Router)
+from repro.sched.engine import Request
+from repro.sched.faults import (FAULT_PLANS, FaultPlan, check_resilience,
+                                registered_fault_plans,
+                                resolve_fault_plan)
+from repro.sched.policy import make_cluster_policy
+from repro.sched.replay import (REPLAY_MODEL, ClusterOracle, FaultOracle,
+                                replay_cluster)
+from repro.sched.sweep import (AxisGrid, SweepCache, SweepSpec, run_legs,
+                               run_sweep, sweep_json)
+from repro.sched.workload import WorkloadSpec, scenario_spec, scenario_trace
+
+SHARDS = ("shard0", "shard1", "shard2", "shard3")
+DUR = 30_000.0
+
+
+# ------------------------------------------------------- plan artifact
+
+
+def test_plan_roundtrip_and_hash():
+    p = FAULT_PLANS["storm"]
+    back = FaultPlan.from_dict(json.loads(json.dumps(p.to_dict())))
+    assert back == p
+    assert back.plan_hash == p.plan_hash
+    assert len(p.plan_hash) == 12
+
+
+def test_plan_rejects_unknown_keys_and_bad_values():
+    with pytest.raises(ValueError):
+        FaultPlan.from_dict({"name": "x", "nope": 1})
+    with pytest.raises(ValueError):
+        FaultPlan(name="")
+    with pytest.raises(ValueError):
+        FaultPlan(name="x", drop_prob=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(name="x", fail_rate_per_min=-1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(name="x", straggler_factor=0.5)
+
+
+def test_default_plans_registered():
+    names = registered_fault_plans()
+    for want in ("none", "crash", "brownout", "straggler", "flaky",
+                 "storm", "crash-r1-d250", "crash-r3-d1000"):
+        assert want in names
+    # the all-zero control plan really injects nothing
+    assert FAULT_PLANS["none"].events(SHARDS, DUR) == []
+    assert not FAULT_PLANS["none"].should_drop(7, 0)
+
+
+def test_resolve_fault_plan_forms():
+    p = FAULT_PLANS["crash"]
+    assert resolve_fault_plan(None) is None
+    assert resolve_fault_plan("crash") is p
+    assert resolve_fault_plan(p) is p
+    assert resolve_fault_plan(p.to_dict()) == p
+    with pytest.raises(KeyError):
+        resolve_fault_plan("no-such-plan")
+    with pytest.raises(TypeError):
+        resolve_fault_plan(42)
+
+
+def test_same_seed_byte_identical_event_stream():
+    a = FAULT_PLANS["storm"].events_json(SHARDS, DUR)
+    b = FAULT_PLANS["storm"].events_json(SHARDS, DUR)
+    assert a.encode() == b.encode()
+
+
+def test_different_seeds_differ():
+    a = FaultPlan(name="x", seed=1, fail_rate_per_min=6.0)
+    b = FaultPlan(name="x", seed=2, fail_rate_per_min=6.0)
+    assert a.events_json(SHARDS, DUR) != b.events_json(SHARDS, DUR)
+    assert a.plan_hash != b.plan_hash
+
+
+def test_crash_windows_never_overlap_and_pair_recovers():
+    plan = FaultPlan(name="x", seed=3, fail_rate_per_min=30.0,
+                     fail_duration_ms=2000.0, detection_latency_ms=250.0)
+    evs = plan.events(SHARDS, DUR)
+    fails = [e for e in evs if e.kind == "shard_fail"]
+    recs = [e for e in evs if e.kind == "shard_recover"]
+    assert fails, "a 30/min plan must draw failures"
+    assert len(fails) == len(recs)
+    rec_keys = {(e.shard, e.t) for e in recs}
+    for shard in SHARDS:
+        last_clear = -1.0
+        for e in sorted((e for e in fails if e.shard == shard),
+                        key=lambda e: e.t):
+            assert e.t >= last_clear, (shard, e.t, last_clear)
+            assert (shard, e.t + plan.fail_duration_ms) in rec_keys
+            last_clear = (e.t + plan.fail_duration_ms
+                          + plan.detection_latency_ms)
+
+
+def test_should_drop_is_deterministic_and_rerolls_per_attempt():
+    plan = FAULT_PLANS["flaky"]
+    decisions0 = [plan.should_drop(rid, 0) for rid in range(4000)]
+    assert decisions0 == [plan.should_drop(rid, 0) for rid in range(4000)]
+    rate = sum(decisions0) / len(decisions0)
+    assert 0.015 < rate < 0.06      # drop_prob 0.03
+    # a retry re-rolls: attempt 1 flips the verdict for some rid
+    assert any(plan.should_drop(rid, 0) != plan.should_drop(rid, 1)
+               for rid in range(4000))
+
+
+def test_workload_spec_fault_plan_roundtrip():
+    spec = scenario_spec("faults/crash")
+    assert spec.fault_plan == "crash"
+    back = WorkloadSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert back.generate(duration_ms=2_000.0).meta["fault_plan"] == "crash"
+    # a plain spec neither serializes the key nor stamps the meta —
+    # pre-fault spec hashes and trace bytes are untouched
+    plain = scenario_spec("steady")
+    assert plain.fault_plan is None
+    assert "fault_plan" not in plain.to_dict()
+    assert "fault_plan" not in plain.generate(duration_ms=2_000.0).meta
+
+
+# ------------------------------------------- FaultOracle negative tests
+
+
+def _req(rid, arrive_ms=0.0, window=50.0, tenant="t"):
+    r = Request(rid=rid, arrive_ms=arrive_ms, prompt_len=128, max_new=8,
+                tenant=tenant, deadline_window_ms=window)
+    r.deadline = arrive_ms + window
+    return r
+
+
+def test_fault_oracle_catches_duplicate_completion():
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["flaky"], 3)
+    r = _req(0)
+    orc.on_complete(5.0, r)
+    orc.on_complete(6.0, r)           # retry raced the first completion
+    assert any(v["check"] == "fault-dup-complete" for v in orc.violations)
+
+
+def test_fault_oracle_catches_dispatch_to_dead_shard():
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    orc.on_detect(10.0, "shard1")
+    orc.on_dispatch(11.0, _req(0), "shard1")
+    assert any(v["check"] == "fault-dead-dispatch" for v in orc.violations)
+    # after recovery the shard is a legal target again
+    n = orc.n_violations
+    orc.on_recover(20.0, "shard1")
+    orc.on_dispatch(21.0, _req(1), "shard1")
+    assert orc.n_violations == n
+
+
+def test_fault_oracle_catches_over_cap_retry():
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    r = _req(0)
+    r.attempts = 3
+    orc.on_retry(5.0, r)
+    assert any(v["check"] == "fault-retry-cap" for v in orc.violations)
+
+
+def test_fault_oracle_catches_out_of_edf_drain():
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    late, early = _req(0, window=900.0), _req(1, window=40.0)
+    orc.on_drain(5.0, "shard0", [late, early])    # later deadline first
+    assert any(v["check"] == "fault-drain-order" for v in orc.violations)
+
+
+def test_fault_oracle_catches_request_lost_on_drain():
+    class _M:
+        injected = 5
+        leftover = 0
+        total_ms = 100.0
+
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    for rid in range(4):              # the fifth request simply vanishes
+        orc.on_complete(10.0, _req(rid))
+    orc.on_end(_M())
+    assert any(v["check"] == "fault-conservation" for v in orc.violations)
+
+
+def test_fault_oracle_catches_retry_after_terminal():
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    r = _req(0)
+    orc.on_shed(5.0, r, "overload")
+    orc.on_retry(6.0, r)
+    assert any(v["check"] == "fault-conservation" for v in orc.violations)
+
+
+def test_fault_oracle_clean_run_is_clean():
+    class _M:
+        injected = 3
+        leftover = 1
+        total_ms = 100.0
+
+    orc = FaultOracle()
+    orc.on_run_start(FAULT_PLANS["crash"], 3)
+    orc.on_detect(1.0, "shard0")
+    a, b = _req(0, window=40.0), _req(1, window=90.0)
+    orc.on_drain(2.0, "shard0", [a, b])
+    orc.on_recover(5.0, "shard0")
+    orc.on_retry(2.0, a)
+    orc.on_complete(8.0, a)
+    orc.on_shed(9.0, b, "overload")
+    orc.on_end(_M())                  # rid 2 legitimately leftover
+    assert orc.n_violations == 0
+    assert orc.counts["drained"] == 2
+    assert orc.counts["completed"] == 1
+    assert orc.counts["shed"] == 1
+
+
+# ------------------------------------------------ recovery end-to-end
+
+
+def _fault_replay(plan, **kw):
+    trace = scenario_trace("faults/crash", duration_ms=DUR, seed=0)
+    return replay_cluster(trace, n_shards=4, fault_plan=plan, **kw)
+
+
+def test_crash_drains_complete_on_survivors():
+    """The acceptance gate: a shard_fail mid-trace drains the dead
+    shard's queued + in-flight requests back through the router and
+    every one of them completes on the surviving shards — exact
+    conservation, zero violations."""
+    res = _fault_replay("crash")
+    assert res["n_violations"] == 0, res["violations"][:3]
+    s = res["metrics"]
+    assert s["faults_injected"] == 2          # seed-0 stream: s2, s3
+    assert s["shard_recoveries"] == 2
+    assert s["drained"] > 0
+    assert s["retries"] >= s["drained"]
+    assert s["leftover"] == 0
+    assert s["injected"] == (s["completed"] + s["shed_total"]
+                             + s["expired_total"])
+    assert s["completed"] == s["injected"]    # nobody actually lost
+    assert res["fault_plan"] == "crash"
+    assert res["fault_plan_hash"] == FAULT_PLANS["crash"].plan_hash
+    assert res["fault_counts"]["drained"] == s["drained"]
+
+
+def test_fault_grid_tail_within_2x_of_no_fault():
+    """4-shard cluster under the default crash grid keeps itl_p99
+    within 2x of the no-fault control while conserving every request."""
+    base = _fault_replay("none")["metrics"]
+    assert base["faults_injected"] == 0
+    for plan in ("crash-r1-d250", "crash-r3-d250", "crash-r3-d1000"):
+        s = _fault_replay(plan)["metrics"]
+        assert s["injected"] == (s["completed"] + s["shed_total"]
+                                 + s["expired_total"]), plan
+        assert s["itl_p99_ms"] <= 2.0 * base["itl_p99_ms"], (
+            plan, s["itl_p99_ms"], base["itl_p99_ms"])
+
+
+def test_detection_latency_scales_drain_size():
+    """Slower detection feeds the dead shard longer — strictly more
+    requests to drain at detect, same conservation."""
+    fast = _fault_replay("crash-r3-d250")["metrics"]
+    slow = _fault_replay("crash-r3-d1000")["metrics"]
+    assert slow["drained"] > fast["drained"]
+
+
+def test_fault_replay_is_deterministic():
+    a, b = (json.dumps(_fault_replay("storm"), sort_keys=True)
+            for _ in range(2))
+    assert a == b
+
+
+def test_dropped_responses_retry_and_complete():
+    res = _fault_replay("flaky")
+    s = res["metrics"]
+    assert res["n_violations"] == 0
+    assert s["dropped"] > 0
+    assert s["retries"] >= s["dropped"]
+    assert s["completed"] == s["injected"]
+
+
+def test_shedding_hits_lowest_slo_class_only():
+    """Graceful degradation on a saturated half-size cell: overload
+    shedding takes ONLY the lowest SLO class (batch, the largest
+    deadline window), per-tenant accounted, while the conservation
+    identity still holds exactly (leftover counts the backlog)."""
+    trace = scenario_trace("faults/brownout", duration_ms=12_000.0,
+                           seed=0)
+    plan = resolve_fault_plan(trace.meta["fault_plan"])
+    cluster = ClusterTopology.homogeneous(2, 8, 2, policy="specialized")
+    oracle = ClusterOracle(ClusterConfig().serve.deadline_window_ms)
+    eng = ClusterEngine(cluster, "cluster-adaptive", REPLAY_MODEL,
+                        ClusterConfig())
+    m = eng.run(trace.to_engine_requests(), trace.duration_ms + 20_000.0,
+                oracle=oracle, fault_plan=plan,
+                fault_horizon_ms=trace.duration_ms)
+    assert oracle.n_violations == 0, oracle.violations[:3]
+    assert sum(m.shed.values()) > 0, "cell must actually overload"
+    assert set(m.shed) == {"batch"}           # never a higher class
+    assert set(m.shed_reasons) == {"overload"}
+    terminal = (sum(m.shard_metrics[n].completed for n in m.shard_metrics)
+                + sum(m.shed.values())
+                + sum(m.deadline_missed_at_router.values()))
+    assert m.injected == terminal + m.leftover
+
+
+def test_router_expires_held_requests_at_deadline():
+    """Satellite bugfix: a held request whose budget hits zero leaves
+    the queue as an expiry — it can never starve at the head."""
+    policy = make_cluster_policy("cluster-adaptive")
+    router = Router(policy, default_window_ms=50.0)
+    r0, r1 = _req(0, 0.0, window=40.0), _req(1, 0.0, window=5_000.0)
+    router.arrive(0.0, r0)
+    router.arrive(0.0, r1)
+    assert router.expire_due(10.0) == []      # budget remains: no-op
+    expired = router.expire_due(40.0)
+    assert [r.rid for r in expired] == [0]
+    assert len(router) == 1                   # r1 still queued
+    assert router.head_deadline() == r1.deadline
+
+
+def test_router_shed_over_prefers_largest_window():
+    policy = make_cluster_policy("cluster-adaptive")
+    router = Router(policy, default_window_ms=50.0)
+    reqs = [_req(0, 0.0, window=60.0, tenant="interactive"),
+            _req(1, 0.0, window=2_000.0, tenant="batch"),
+            _req(2, 0.0, window=200.0, tenant="standard"),
+            _req(3, 0.0, window=2_000.0, tenant="batch")]
+    for r in reqs:
+        router.arrive(0.0, r)
+    victims = router.shed_over(1.0, max_queue=2)
+    assert sorted(r.rid for r in victims) == [1, 3]   # batch first
+    assert len(router) == 2
+    assert router.shed_over(1.0, max_queue=2) == []   # now at bound
+
+
+def test_retry_preserves_remaining_deadline_budget():
+    policy = make_cluster_policy("cluster-adaptive")
+    router = Router(policy, default_window_ms=50.0)
+    r = _req(0, 100.0, window=400.0)
+    router.arrive(100.0, r)
+    stamped = r.deadline
+    assert stamped == 500.0
+    router.dispatch(100.0, ())                # drains nothing: no views
+    router.requeue(250.0, r)                  # drained off a dead shard
+    assert r.deadline == stamped              # budget spent, not reset
+    assert router.head_deadline() == stamped
+
+
+# -------------------------------------------------- sweep integration
+
+
+def _chaos_spec(plans=("none", "crash-r3-d250")):
+    return SweepSpec(
+        name="chaos-test",
+        grids=(AxisGrid(
+            base={"mechanism": "cluster", "duration_ms": 20_000.0,
+                  "scenario": "faults/crash",
+                  "policy": "cluster-adaptive", "n_shards": 4,
+                  "devices_per_shard": 16, "prefill_devices": 4},
+            axes={"fault_plan": plans}),))
+
+
+def test_fault_plan_is_a_sweep_axis():
+    result = run_sweep(_chaos_spec())
+    assert result["n_violations"] == 0
+    rows = result["rows"]
+    by_plan = {r["fault_plan"]: r for r in rows}
+    assert by_plan["none"]["faults_injected"] == 0
+    assert by_plan["crash-r3-d250"]["faults_injected"] > 0
+    assert by_plan["crash-r3-d250"]["shard_recoveries"] > 0
+    for r in rows:
+        assert r["injected"] == (r["completed"] + r["shed_total"]
+                                 + r["expired_total"])
+    assert check_resilience(result) == []
+
+
+def test_chaos_sweep_serial_parallel_byte_identical():
+    spec = _chaos_spec()
+    ser = run_sweep(spec, workers=1)
+    par = run_sweep(spec, workers=2)
+    assert sweep_json(ser, meta=False).encode() == \
+        sweep_json(par, meta=False).encode()
+
+
+def test_check_resilience_flags_broken_conservation():
+    result = run_sweep(_chaos_spec(plans=("crash-r3-d250",)))
+    row = result["rows"][0]
+    row["completed"] -= 1             # plant a lost request
+    fails = check_resilience(result)
+    assert any("conservation" in f for f in fails)
+
+
+def test_check_resilience_flags_missing_faults():
+    result = run_sweep(_chaos_spec(plans=("crash-r3-d250",)))
+    for row in result["rows"]:
+        row["faults_injected"] = 0
+        row["shard_recoveries"] = 0
+    fails = check_resilience(result)
+    assert any("zero faults injected" in f for f in fails)
+    assert any("zero shard recoveries" in f for f in fails)
+
+
+# --------------------------------------------------- leg wall-clock cap
+
+
+def _tiny_legs():
+    return SweepSpec(
+        name="timeout-test",
+        grids=(AxisGrid(
+            base={"mechanism": "engine", "duration_ms": 1_500.0,
+                  "n_devices": 8, "prefill_devices": 2},
+            axes={"scenario": ("steady", "bursty"),
+                  "policy": ("shared",)}),)).legs()
+
+
+def _patched_runner(sweep_mod, replay_mod, fn):
+    """Bind a planted leg runner; fork-started workers inherit it, so
+    the old pool must be gone before the first submit."""
+    replay_mod._shutdown_pool()
+    sweep_mod._leg_runner = fn
+
+
+def test_leg_timeout_retry_succeeds(tmp_path):
+    """A leg that hangs once comes back on the fresh pool's retry: no
+    failed legs, every result present."""
+    from repro.sched import replay as replay_mod
+    from repro.sched import sweep as sweep_mod
+    legs = _tiny_legs()
+    flag = tmp_path / "hung-once"
+    target = legs[0]["key"]
+    real = sweep_mod._run_leg_timed
+
+    def hang_once(leg):
+        if leg["key"] == target and not flag.exists():
+            flag.write_text("x")
+            time.sleep(60.0)
+        return real(leg)
+
+    _patched_runner(sweep_mod, replay_mod, hang_once)
+    try:
+        results, stats = run_legs(legs, workers=2, leg_timeout_s=3.0)
+    finally:
+        _patched_runner(sweep_mod, replay_mod, real)
+    assert stats["failed_legs"] == []
+    assert all(r is not None for r in results)
+
+
+def test_leg_timeout_exhausted_fails_leg_and_skips_cache(tmp_path):
+    """A leg that hangs on the retry too lands in failed_legs with a
+    None result, is never cached, and the innocent legs still finish
+    (resubmitted at no charge after the pool kill)."""
+    from repro.sched import replay as replay_mod
+    from repro.sched import sweep as sweep_mod
+    legs = _tiny_legs()
+    target = legs[0]["key"]
+    real = sweep_mod._run_leg_timed
+
+    def hang_always(leg):
+        if leg["key"] == target:
+            time.sleep(60.0)
+        return real(leg)
+
+    cache = SweepCache(tmp_path / "cache")
+    _patched_runner(sweep_mod, replay_mod, hang_always)
+    try:
+        results, stats = run_legs(legs, workers=2, leg_timeout_s=3.0,
+                                  cache=cache)
+    finally:
+        _patched_runner(sweep_mod, replay_mod, real)
+    assert stats["failed_legs"] == [target]
+    by_key = {leg["key"]: res for leg, res in zip(legs, results)}
+    assert by_key[target] is None
+    assert all(res is not None for k, res in by_key.items()
+               if k != target)
+    assert cache.get(legs[0]) is None         # failure never cached
+    # the failed leg keeps its coordinate row, flagged — not dropped
+    from repro.sched.sweep import tidy_rows
+    rows = tidy_rows(legs, results)
+    failed_rows = [r for r in rows if r.get("failed")]
+    assert [r["key"] for r in failed_rows] == [target]
